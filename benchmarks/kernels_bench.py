@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks (interpret-mode wall clock on CPU; the
+numbers calibrate relative costs, not TPU throughput)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bench import measure
+from repro.kernels.pack import ops as pack_ops
+from repro.kernels.spmv import ops as spmv_ops
+from repro.spmv.matrix import band_matrix
+
+
+def kernel_benches() -> list[str]:
+    rows = []
+    A = band_matrix(n=4096, nnz=32768, half_bandwidth=1024, seed=0)
+    x = np.random.default_rng(0).standard_normal(4096).astype(np.float32)
+    va, ca, xa = (jnp.asarray(A.vals), jnp.asarray(A.cols),
+                  jnp.asarray(x))
+
+    t = measure(lambda: spmv_ops.ell_matvec(va, ca, xa).block_until_ready())
+    rows.append(f"kernel_ell_matvec_4k,{t * 1e6:.1f},interpret")
+    t = measure(lambda: spmv_ops.ell_matvec_ref(va, ca, xa)
+                .block_until_ready())
+    rows.append(f"kernel_ell_matvec_ref_4k,{t * 1e6:.1f},oracle")
+
+    idx = jnp.asarray(
+        np.random.default_rng(1).integers(0, 4096, 1024).astype(np.int32))
+    t = measure(lambda: pack_ops.pack(xa, idx).block_until_ready())
+    rows.append(f"kernel_pack_1k,{t * 1e6:.1f},interpret")
+    t = measure(lambda: pack_ops.pack_ref(xa, idx).block_until_ready())
+    rows.append(f"kernel_pack_ref_1k,{t * 1e6:.1f},oracle")
+    return rows
+
+
+def model_benches() -> list[str]:
+    """Reduced-arch step wall-clock: train + decode per arch family."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.data.pipeline import DataConfig, batch_for
+    from repro.models.model import LM
+    from repro.optim.adamw import AdamW
+    from repro.train.step import make_train_step
+
+    rows = []
+    for arch in ("smollm-360m", "deepseek-moe-16b", "rwkv6-3b",
+                 "jamba-v0.1-52b"):
+        cfg = get_reduced(arch)
+        m = LM(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        opt = AdamW(learning_rate=1e-3)
+        ostate = opt.init(params)
+        dcfg = DataConfig(seq_len=32, global_batch=4, vocab=cfg.vocab)
+        step = jax.jit(make_train_step(m, opt))
+        batch = batch_for(dcfg, 0, cfg)
+
+        def run():
+            out = step(params, ostate, batch)
+            jax.block_until_ready(out[2]["loss"])
+
+        t = measure(run)
+        rows.append(f"train_step_{arch},{t * 1e6:.1f},reduced-cfg")
+    return rows

@@ -1,0 +1,50 @@
+"""Quickstart: the paper's pipeline end-to-end in ~30 lines.
+
+  DAG -> MCTS -> labels -> features -> decision tree -> design rules
+
+Usage: PYTHONPATH=src python examples/quickstart.py [--iters 200]
+"""
+import argparse
+
+import numpy as np
+
+import repro.core as C
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=200)
+    args = ap.parse_args()
+
+    # 1. The program: the paper's distributed SpMV, as an op DAG.
+    graph = C.spmv_dag()
+
+    # 2. Explore the (ordering x stream assignment) space with MCTS,
+    #    scored by the TPU machine model.
+    mcts = C.MCTS(graph, n_streams=2,
+                  objective=lambda s: C.makespan(graph, s), seed=0)
+    result = mcts.run(args.iters)
+    times = np.array(result.times)
+    print(f"explored {len(result.schedules)} implementations; "
+          f"spread {times.max() / times.min():.2f}x "
+          f"({times.min() * 1e6:.1f}us .. {times.max() * 1e6:.1f}us)")
+
+    # 3. Class labels from the sorted measurements (Fig. 4).
+    labels = C.label_times(times)
+    print(f"{labels.n_classes} performance classes, "
+          f"sizes {np.bincount(labels.labels).tolist()}")
+
+    # 4. Feature vectors + decision tree (Alg. 1).
+    fm = C.featurize(graph, result.schedules)
+    tree = C.algorithm1(fm.X, labels.labels)
+    print(f"tree: {tree.n_leaves()} leaves, depth {tree.depth()}, "
+          f"train error {tree.training_error(fm.X, labels.labels):.3f}")
+
+    # 5. Design rules per performance class (Tables VI-VIII).
+    rulesets = C.extract_rulesets(tree, fm.features)
+    print()
+    print(C.render_rules_table(C.rules_by_class(rulesets), top_k=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Batched serving: prefill a batch of prompts, decode greedily.
+
+Demonstrates the KV/state-cache serving path for any architecture
+family (attention, SSM, hybrid, enc-dec, VLM caches all supported).
+
+Usage: PYTHONPATH=src python examples/serve_lm.py
+           [--arch rwkv6-3b] [--batch 4] [--prompt-len 24] [--new 16]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_reduced
+from repro.models.model import LM
+from repro.serve.engine import Engine
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="smollm-360m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab)
+    frontend = None
+    if cfg.frontend is not None:
+        frontend = jax.random.normal(
+            key, (args.batch, cfg.frontend.n_positions,
+                  cfg.frontend.d_frontend), jnp.float32)
+
+    n_front = cfg.frontend.n_positions if cfg.family == "vlm" else 0
+    engine = Engine(model, params,
+                    t_max=args.prompt_len + n_front + args.new + 1)
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, args.new, frontend=frontend)
+    wall = time.perf_counter() - t0
+    print(f"arch={args.arch} family={cfg.family} "
+          f"batch={args.batch} new={args.new}")
+    for b in range(args.batch):
+        print(f"  seq{b}: prompt..{prompts[b, -4:].tolist()} -> "
+              f"{out[b].tolist()}")
+    total = args.batch * args.new
+    print(f"{total} tokens in {wall:.2f}s "
+          f"({total / wall:.1f} tok/s incl. compile)")
+
+    # Consistency check: generated tokens equal the argmax continuation
+    # of a full forward pass over (prompt + generated).
+    full = jnp.concatenate([prompts, out[:, :-1]], axis=1)
+    batch = {"tokens": full}
+    if frontend is not None:
+        batch["frontend"] = frontend
+    logits, _ = model.forward(params, batch)
+    ref = jnp.argmax(logits[:, args.prompt_len - 1:], axis=-1)
+    ok = bool(jnp.all(ref == out))
+    print("decode == forward argmax:", ok)
+    assert ok
+
+
+if __name__ == "__main__":
+    main()

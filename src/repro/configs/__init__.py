@@ -1,0 +1,29 @@
+"""Architecture registry: ``--arch <id>`` -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+_MODULES: dict[str, str] = {
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "granite-3-8b": "repro.configs.granite_3_8b",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "rwkv6-3b": "repro.configs.rwkv6_3b",
+    "deepseek-moe-16b": "repro.configs.deepseek_moe_16b",
+    "moonshot-v1-16b-a3b": "repro.configs.moonshot_v1_16b_a3b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "internvl2-2b": "repro.configs.internvl2_2b",
+}
+
+ARCHS = list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    return importlib.import_module(_MODULES[name]).REDUCED

@@ -1,0 +1,44 @@
+"""The paper's contribution: MCTS design-space search + decision-tree
+design rules for asynchronous compute/communication programs.
+
+Pipeline (paper Fig. 2):
+
+    Graph (dag.py)  ->  MCTS (mcts.py) / exhaustive (enumerate.py)
+        -> measured times (costmodel.py analytic | executor.py wall-clock)
+        -> class labels (labels.py)
+        -> feature vectors (features.py)
+        -> decision tree (dtree.py)
+        -> design rules (rules.py)
+"""
+from repro.core.dag import (BoundOp, CommRole, Graph, Op, OpKind, Schedule,
+                            canonicalize_streams, spmv_dag,
+                            validate_schedule)
+from repro.core.sync import ExpandedItem, expand, expanded_names
+from repro.core.enumerate import count_schedules, enumerate_schedules
+from repro.core.costmodel import Machine, SimResult, makespan, simulate
+from repro.core.mcts import MCTS, MCTSResult
+from repro.core.labels import Labeling, label_times
+from repro.core.features import (Feature, FeatureMatrix, featurize,
+                                 featurize_like)
+from repro.core.dtree import DecisionTree, TreeSearchTrace, algorithm1
+from repro.core.rules import (Rule, RuleSet, annotate_vs_canonical,
+                              class_range_accuracy, extract_rulesets,
+                              render_rules_table, rules_by_class)
+from repro.core.executor import build_runner, jit_runner, op_impl
+from repro.core.stepdag import StepCosts, train_step_dag, with_comm_durations
+
+__all__ = [
+    "BoundOp", "CommRole", "Graph", "Op", "OpKind", "Schedule",
+    "canonicalize_streams", "spmv_dag", "validate_schedule",
+    "ExpandedItem", "expand", "expanded_names",
+    "count_schedules", "enumerate_schedules",
+    "Machine", "SimResult", "makespan", "simulate",
+    "MCTS", "MCTSResult",
+    "Labeling", "label_times",
+    "Feature", "FeatureMatrix", "featurize", "featurize_like",
+    "DecisionTree", "TreeSearchTrace", "algorithm1",
+    "Rule", "RuleSet", "annotate_vs_canonical", "class_range_accuracy",
+    "extract_rulesets", "render_rules_table", "rules_by_class",
+    "build_runner", "jit_runner", "op_impl",
+    "StepCosts", "train_step_dag", "with_comm_durations",
+]

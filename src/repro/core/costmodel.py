@@ -1,0 +1,162 @@
+"""Analytic machine model: simulate an expanded schedule's makespan.
+
+The container is CPU-only, so MCTS needs a deterministic, fast objective
+that reflects *TPU-class* hardware. This discrete-event model simulates:
+
+  * a host control thread executing the expanded item sequence in order,
+  * N device "streams" (serialization chains; on TPU, the compute stream
+    and DMA/ICI channels) with FIFO semantics,
+  * asynchronous point-to-point transfers with rendezvous semantics
+    (a transfer starts once both the local post and the symmetric remote
+    post have happened; ranks are modeled as symmetric, which is exact for
+    the paper's uniform band SpMV and for bulk-synchronous LM steps),
+  * CUDA-event-style sync ops as produced by :mod:`repro.core.sync`.
+
+Durations come from op metadata (flops / HBM bytes / comm bytes) and the
+:class:`Machine` roofline constants. Defaults are TPU v5e-like:
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.dag import CommRole, Graph, OpKind, Schedule
+from repro.core.sync import ExpandedItem, expand
+
+
+@dataclasses.dataclass(frozen=True)
+class Machine:
+    flops_per_s: float = 197e12       # bf16 peak per chip
+    hbm_bytes_per_s: float = 819e9    # HBM bandwidth
+    link_bytes_per_s: float = 50e9    # per-ICI-link
+    launch_overhead_s: float = 5e-6   # async op launch cost on host
+    cpu_op_s: float = 1e-6            # generic synchronous host op
+    sync_op_s: float = 0.5e-6         # event record / wait bookkeeping
+    comm_latency_s: float = 5e-6      # point-to-point latency
+
+    def gpu_duration(self, flops: float, bytes_hbm: float) -> float:
+        t = 0.0
+        if flops:
+            t = max(t, flops / self.flops_per_s)
+        if bytes_hbm:
+            t = max(t, bytes_hbm / self.hbm_bytes_per_s)
+        return max(t, 1e-7)
+
+    def transfer_duration(self, nbytes: float) -> float:
+        return self.comm_latency_s + nbytes / self.link_bytes_per_s
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    op_start: dict[str, float]
+    op_end: dict[str, float]
+
+
+def simulate(graph: Graph, schedule: Schedule,
+             machine: Machine | None = None) -> SimResult:
+    """Simulate the expanded schedule; return its makespan (seconds)."""
+    m = machine or Machine()
+    items: list[ExpandedItem] = expand(graph, schedule)
+
+    cpu_t = 0.0
+    stream_t: dict[int, float] = {}
+    stream_wait: dict[int, float] = {}   # pending CSWE floor per stream
+    event_t: dict[str, float] = {}       # recorded-op name -> event time
+    op_start: dict[str, float] = {}
+    op_end: dict[str, float] = {}
+
+    # Rendezvous bookkeeping (symmetric-rank model). Multiple channels
+    # (per-neighbor fine-grained DAGs) are keyed by the op-name suffix
+    # after PostSend/PostRecv; the symmetric remote send for our recv on
+    # channel s is our own send on the *twin* channel (l <-> r; same
+    # channel when there is only one).
+    post_send_t: dict[str, float] = {}
+    post_recv_t: dict[str, float] = {}
+    send_bytes: dict[str, float] = {}
+    recv_bytes: dict[str, float] = {}
+    _twin = {"_l": "_r", "_r": "_l",
+             # 3-D halo faces: our recv on the -d face pairs with the
+             # symmetric neighbor's +d send (== our own +d send).
+             "_xn": "_xp", "_xp": "_xn", "_yn": "_yp", "_yp": "_yn",
+             "_zn": "_zp", "_zp": "_zn"}
+
+    def transfer_done(kind: str, suffix: str) -> float:
+        if kind == "send":
+            # Eager/buffered semantics: the send buffer is reusable once
+            # the wire transfer finishes, independent of the remote post.
+            assert suffix in post_send_t, "WaitSend before PostSend"
+            return post_send_t[suffix] + \
+                m.transfer_duration(send_bytes[suffix])
+        twin = _twin.get(suffix, suffix)
+        if twin not in post_send_t:
+            twin = suffix
+        assert twin in post_send_t and suffix in post_recv_t, \
+            "WaitRecv before both posts - DAG should prevent this"
+        return max(post_send_t[twin], post_recv_t[suffix]) + \
+            m.transfer_duration(recv_bytes[suffix])
+
+    for it in items:
+        if it.kind == "CER":
+            # Event enqueued on the producer's stream right after it: event
+            # fires when everything currently in that stream completes.
+            event_t[it.anchor] = stream_t.get(it.stream, 0.0)
+            cpu_t += m.sync_op_s
+            continue
+        if it.kind == "CES":
+            cpu_t += m.sync_op_s
+            for w in it.waits:
+                cpu_t = max(cpu_t, event_t[w])
+            continue
+        if it.kind == "CSWE":
+            cpu_t += m.sync_op_s
+            floor = max(event_t[w] for w in it.waits)
+            s = it.stream
+            stream_wait[s] = max(stream_wait.get(s, 0.0), floor)
+            continue
+
+        op = graph.ops[it.name]
+        if op.kind is OpKind.GPU:
+            cpu_t += m.launch_overhead_s  # async launch
+            s = it.stream
+            start = max(cpu_t, stream_t.get(s, 0.0),
+                        stream_wait.pop(s, 0.0))
+            dur = op.duration if op.duration is not None else \
+                m.gpu_duration(op.flops, op.bytes_hbm)
+            op_start[it.name] = start
+            op_end[it.name] = start + dur
+            stream_t[s] = start + dur
+            continue
+
+        # Synchronous CPU op.
+        dur = op.duration if op.duration is not None else m.cpu_op_s
+        op_start[it.name] = cpu_t
+        if op.comm_role is CommRole.POST_SEND:
+            cpu_t += dur
+            sfx = it.name.removeprefix("PostSend")
+            post_send_t[sfx] = cpu_t
+            send_bytes[sfx] = op.comm_bytes
+        elif op.comm_role is CommRole.POST_RECV:
+            cpu_t += dur
+            sfx = it.name.removeprefix("PostRecv")
+            post_recv_t[sfx] = cpu_t
+            recv_bytes[sfx] = op.comm_bytes
+        elif op.comm_role is CommRole.WAIT_SEND:
+            cpu_t += dur
+            cpu_t = max(cpu_t, transfer_done(
+                "send", it.name.removeprefix("WaitSend")))
+        elif op.comm_role is CommRole.WAIT_RECV:
+            cpu_t += dur
+            cpu_t = max(cpu_t, transfer_done(
+                "recv", it.name.removeprefix("WaitRecv")))
+        else:
+            cpu_t += dur
+        op_end[it.name] = cpu_t
+
+    makespan = max([cpu_t] + list(stream_t.values()))
+    return SimResult(makespan=makespan, op_start=op_start, op_end=op_end)
+
+
+def makespan(graph: Graph, schedule: Schedule,
+             machine: Machine | None = None) -> float:
+    return simulate(graph, schedule, machine).makespan

@@ -1,0 +1,106 @@
+"""Sequence-to-vector feature transformation (paper §IV-B).
+
+For a set of expanded schedules (original ops + inserted sync ops):
+
+  * one *ordering* feature per ordered pair (u, v) of items:
+      1 if u appears before v in the expanded sequence, else 0
+    (only (u, v) with u < v lexicographically are kept; the reverse pair is
+    its complement and adds no information);
+  * one *stream* feature per unordered pair of GPU ops:
+      1 if both are bound to the same stream, else 0.
+
+Features that take the same value in every schedule (e.g. DAG-implied
+orderings) are dropped — they have no discriminatory power.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.core.dag import Graph, OpKind, Schedule
+from repro.core.sync import expanded_names
+
+
+@dataclasses.dataclass(frozen=True)
+class Feature:
+    kind: str  # 'order' | 'stream'
+    u: str
+    v: str
+
+    def describe(self, value: int) -> str:
+        """Human-readable rule text for this feature taking ``value``."""
+        if self.kind == "order":
+            return (f"{self.u} before {self.v}" if value
+                    else f"{self.v} before {self.u}")
+        return (f"{self.u} same stream as {self.v}" if value
+                else f"{self.u} different stream than {self.v}")
+
+
+@dataclasses.dataclass
+class FeatureMatrix:
+    features: list[Feature]
+    X: np.ndarray  # (n_schedules, n_features) int8
+
+    def names(self) -> list[str]:
+        return [f"{f.kind}:{f.u}<{f.v}" for f in self.features]
+
+
+def _positions(names: list[str]) -> dict[str, int]:
+    return {n: i for i, n in enumerate(names)}
+
+
+def featurize(graph: Graph, schedules: list[Schedule]) -> FeatureMatrix:
+    """Build the (pruned) feature matrix for ``schedules``."""
+    expanded = [expanded_names(graph, s) for s in schedules]
+    streams = [s.streams() for s in schedules]
+
+    # Universe of items = union across schedules (sync-op sets can differ
+    # between stream assignments).
+    universe = sorted(set(itertools.chain.from_iterable(expanded)))
+    gpu = sorted(graph.gpu_ops())
+
+    feats: list[Feature] = []
+    for u, v in itertools.combinations(universe, 2):
+        feats.append(Feature("order", u, v))
+    for u, v in itertools.combinations(gpu, 2):
+        feats.append(Feature("stream", u, v))
+
+    X = np.zeros((len(schedules), len(feats)), dtype=np.int8)
+    for i, (names, st) in enumerate(zip(expanded, streams)):
+        pos = _positions(names)
+        for j, f in enumerate(feats):
+            if f.kind == "order":
+                pu, pv = pos.get(f.u), pos.get(f.v)
+                X[i, j] = 1 if (pu is not None and pv is not None
+                                and pu < pv) else 0
+            else:
+                X[i, j] = 1 if st.get(f.u) == st.get(f.v) else 0
+
+    # Drop constant features.
+    keep = [j for j in range(len(feats))
+            if X[:, j].min() != X[:, j].max()]
+    return FeatureMatrix([feats[j] for j in keep], X[:, keep])
+
+
+def featurize_like(graph: Graph, schedules: list[Schedule],
+                   reference: FeatureMatrix) -> np.ndarray:
+    """Feature values for new schedules in an existing feature basis.
+
+    Used by Table V evaluation: classify the *entire* space with a tree
+    trained on an MCTS subset (whose feature pruning defined the basis).
+    """
+    expanded = [expanded_names(graph, s) for s in schedules]
+    streams = [s.streams() for s in schedules]
+    X = np.zeros((len(schedules), len(reference.features)), dtype=np.int8)
+    for i, (names, st) in enumerate(zip(expanded, streams)):
+        pos = _positions(names)
+        for j, f in enumerate(reference.features):
+            if f.kind == "order":
+                pu, pv = pos.get(f.u), pos.get(f.v)
+                X[i, j] = 1 if (pu is not None and pv is not None
+                                and pu < pv) else 0
+            else:
+                X[i, j] = 1 if st.get(f.u) == st.get(f.v) else 0
+    return X

@@ -1,0 +1,89 @@
+"""Synthetic token data pipeline — deterministic and stateless.
+
+Production posture: the batch for step ``s`` is a pure function of
+``(seed, s)``, so fault-tolerant restart needs only the step counter (no
+opaque iterator state in checkpoints) and elastic re-sharding needs only
+the new mesh. Two generators:
+
+  * ``lm_batch``     — iid tokens (markov-ish mixture for non-trivial
+    statistics; loss curves move under training).
+  * ``packed_batch`` — variable-length documents packed to seq_len with
+    EOS separators + loss mask (-1 labels on pad), the layout real LM
+    pipelines produce.
+
+Frontend stubs ([audio]/[vlm]): deterministic pseudo-embeddings keyed by
+(seed, step) per the brief (precomputed frame/patch embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    seq_len: int = 512
+    global_batch: int = 8
+    vocab: int = 32_000
+    eos: int = 0
+    packed: bool = False
+    mean_doc_len: int = 192
+
+
+def _key(cfg: DataConfig, step, salt: int) -> jax.Array:
+    k = jax.random.PRNGKey(cfg.seed)
+    k = jax.random.fold_in(k, salt)
+    return jax.random.fold_in(k, step)
+
+
+def lm_batch(cfg: DataConfig, step) -> dict:
+    """Tokens with a repetition structure a model can learn."""
+    k1, k2, k3 = jax.random.split(_key(cfg, step, 1), 3)
+    b, s = cfg.global_batch, cfg.seq_len
+    base = jax.random.randint(k1, (b, s), 0, cfg.vocab)
+    # Mixture: with p=0.5 copy the previous token + 1 (learnable rule).
+    copy = jnp.concatenate(
+        [base[:, :1], (base[:, :-1] + 1) % cfg.vocab], axis=1)
+    gate = jax.random.bernoulli(k2, 0.5, (b, s))
+    tokens = jnp.where(gate, copy, base)
+    labels = jnp.concatenate(
+        [tokens[:, 1:],
+         jax.random.randint(k3, (b, 1), 0, cfg.vocab)], axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def packed_batch(cfg: DataConfig, step) -> dict:
+    """Documents packed to seq_len; EOS-separated; pad labels = -1."""
+    k1, k2 = jax.random.split(_key(cfg, step, 2), 2)
+    b, s = cfg.global_batch, cfg.seq_len
+    tokens = jax.random.randint(k1, (b, s), 1, cfg.vocab)
+    # Deterministic doc boundaries: geometric-ish via uniform threshold.
+    u = jax.random.uniform(k2, (b, s))
+    boundary = u < (1.0 / cfg.mean_doc_len)
+    tokens = jnp.where(boundary, cfg.eos, tokens)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((b, 1), cfg.eos)], axis=1)
+    # No loss on predicting across a document boundary target pad.
+    labels = jnp.where(labels == cfg.eos, -1, labels)
+    return {"tokens": tokens, "labels": labels}
+
+
+def frontend_batch(cfg: DataConfig, step, model_cfg: ModelConfig) -> dict:
+    fe = model_cfg.frontend
+    k = _key(cfg, step, 3)
+    emb = jax.random.normal(
+        k, (cfg.global_batch, fe.n_positions, fe.d_frontend),
+        jnp.float32)
+    return {"frontend": emb}
+
+
+def batch_for(cfg: DataConfig, step, model_cfg: ModelConfig) -> dict:
+    out = packed_batch(cfg, step) if cfg.packed else lm_batch(cfg, step)
+    if model_cfg.frontend is not None:
+        out.update(frontend_batch(cfg, step, model_cfg))
+    return out

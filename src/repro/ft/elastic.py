@@ -1,0 +1,51 @@
+"""Elastic re-meshing: resume a checkpoint under a different mesh.
+
+Checkpoints store logical (unsharded) arrays, so scaling from e.g.
+(data=16, model=16) to (data=14, model=16) after losing nodes is a
+re-placement: rebuild shardings from the same logical-axis rules against
+the new mesh and ``device_put``. Divisibility degradation is handled by
+the rules engine (a dim that no longer divides is replicated rather than
+failing). The expensive part on a real cluster — moving bytes — is
+exactly what ``device_put`` to the new sharding expresses.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping
+
+import jax
+from jax.sharding import Mesh
+
+from repro.dist import sharding as shd
+
+
+def remesh_state(state, axes_tree, new_mesh: Mesh,
+                 rules: Mapping[str, Any] | None = None):
+    """Re-place a (params-like) pytree under ``new_mesh``."""
+    shapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+    shardings = shd.tree_shardings(axes_tree, new_mesh, rules, shapes)
+    return jax.tree.map(jax.device_put, state, shardings)
+
+
+def degraded_mesh(devices, axis_names: tuple[str, ...],
+                  lost: int) -> Mesh:
+    """Largest rectangular mesh after losing ``lost`` devices.
+
+    Shrinks the leading (data) axis — the standard recovery shape — and
+    drops the remainder devices.
+    """
+    import numpy as np
+    devs_nd = np.asarray(devices)
+    n = devs_nd.size - lost
+    rest = 1
+    # Keep trailing axes' extents; shrink axis 0.
+    # Caller passes the original mesh shape via devices ndarray.
+    devs = devs_nd.reshape(-1)
+    shape = list(devs_nd.shape)
+    for s in shape[1:]:
+        rest *= s
+    lead = n // rest
+    if lead < 1:
+        raise ValueError("not enough devices left for the mesh")
+    keep = lead * rest
+    return Mesh(devs[:keep].reshape(lead, *shape[1:]), axis_names)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the pack (gather) kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pack_ref(x: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """out[j] = x[idx[j]] — halo/send-buffer packing."""
+    return x[idx]

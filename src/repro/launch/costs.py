@@ -1,0 +1,140 @@
+"""Roofline terms for one (arch x shape x mesh) cell.
+
+Hardware constants (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI.
+
+Sources per term (all per chip = per partition):
+
+  compute    HLO dot flops from the loop-corrected analyzer
+             (repro.launch.hlo) over the compiled per-partition module.
+  memory     traffic model over the compiled memory_analysis numbers:
+             train: params+opt are read and written (2x arguments) and
+             live temps stream through HBM twice (write+read);
+             serve: arguments (weights + caches) are read once per step,
+             temps twice.
+  collective per-chip collective operand bytes (loop-corrected) over the
+             per-link ICI bandwidth.
+
+MODEL_FLOPS (analytic; the brief's definition): 6*N*D for dense training
+(N = active params, D = tokens), 2*N*D for single-pass inference. The
+ratio MODEL_FLOPS / (HLO flops x chips) exposes remat/redundancy waste
+(and dispatch overcompute for MoE).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import SHAPES
+from repro.models.config import ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_per_chip: float
+    hlo_collective_bytes_per_chip: float
+    mem_traffic_bytes_per_chip: float
+    chips: int
+    collective_s_tpu: float = 0.0   # f32->bf16-adjusted (see hlo.py)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s_tpu or
+                 self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap estimate: the slowest resource wins."""
+        return max(self.compute_s, self.memory_s,
+                   self.collective_s_tpu or self.collective_s)
+
+    @property
+    def model_flops_ratio(self) -> float:
+        total_hlo = self.hlo_flops_per_chip * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the per-chip peak at the estimated
+        step time — the score §Perf drives up."""
+        if self.step_time_s <= 0:
+            return 0.0
+        useful = self.model_flops / self.chips
+        return useful / (self.step_time_s * PEAK_FLOPS)
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "collective_s_tpu": self.collective_s_tpu,
+            "dominant": self.dominant,
+            "step_time_s": self.step_time_s,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_chip": self.hlo_flops_per_chip,
+            "hlo_collective_bytes_per_chip":
+                self.hlo_collective_bytes_per_chip,
+            "mem_traffic_bytes_per_chip":
+                self.mem_traffic_bytes_per_chip,
+            "model_flops_ratio": self.model_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+def model_flops(cfg: ModelConfig, shape: str) -> float:
+    """The brief's MODEL_FLOPS definition (+ attention quadratic term,
+    which 6ND omits but which dominates prefill_32k)."""
+    cell = SHAPES[shape]
+    n_active = cfg.active_param_count()
+    kinds = cfg.block_kinds()
+    n_attn = sum(k == "attn" for k in kinds)
+    hq, dh = cfg.n_heads, cfg.head_dim
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        tokens = b * s
+        attn = 6.0 * n_attn * b * (s * s / 2) * hq * dh * 2
+        return 6.0 * n_active * tokens + attn
+    if cell.kind == "prefill":
+        tokens = b * s
+        attn = 2.0 * n_attn * b * (s * s / 2) * hq * dh * 2
+        return 2.0 * n_active * tokens + attn
+    # decode: one token per sequence; attention reads the full cache.
+    window = cfg.attn_window or cell.seq_len
+    attn = 4.0 * n_attn * b * min(window, cell.seq_len) * hq * dh
+    return 2.0 * n_active * b + attn
+
+
+def roofline(cfg: ModelConfig, shape: str, kind: str, chips: int,
+             hlo_flops_per_chip: float,
+             collective_bytes_per_chip: float,
+             memory_stats: dict,
+             collective_bytes_f32: float = 0.0) -> Roofline:
+    arg = memory_stats.get("argument_size_in_bytes", 0)
+    temp = memory_stats.get("temp_size_in_bytes", 0)
+    out = memory_stats.get("output_size_in_bytes", 0)
+    alias = memory_stats.get("alias_size_in_bytes", 0)
+    if kind == "train":
+        traffic = 2 * arg + 2 * temp + out - alias
+    else:
+        traffic = arg + 2 * temp + out
+    return Roofline(
+        compute_s=hlo_flops_per_chip / PEAK_FLOPS,
+        memory_s=traffic / HBM_BW,
+        collective_s=collective_bytes_per_chip / LINK_BW,
+        collective_s_tpu=(collective_bytes_per_chip -
+                          0.5 * collective_bytes_f32) / LINK_BW,
+        model_flops=model_flops(cfg, shape),
+        hlo_flops_per_chip=hlo_flops_per_chip,
+        hlo_collective_bytes_per_chip=collective_bytes_per_chip,
+        mem_traffic_bytes_per_chip=float(traffic),
+        chips=chips,
+    )

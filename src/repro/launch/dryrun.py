@@ -1,0 +1,161 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count at first
+# initialization, and the production meshes need 512 host devices.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS                      # noqa: E402
+from repro.configs.shapes import SHAPES, applicable  # noqa: E402
+from repro.launch import costs as costs_mod          # noqa: E402
+from repro.launch import hlo as hlo_mod              # noqa: E402
+from repro.launch.inputs import build_cell           # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+
+"""Multi-pod dry-run driver.
+
+For every (architecture x input shape) cell, on the 16x16 single-pod
+mesh AND the 2x16x16 multi-pod mesh: lower + compile the step function
+from ShapeDtypeStruct stand-ins (no allocation), print
+memory_analysis / cost_analysis, run the loop-corrected HLO analyzer,
+and persist a JSON record for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / \
+    "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             out_dir: pathlib.Path = OUT_DIR, force: bool = False,
+             tag: str = "", **build_kw) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = out_dir / mesh_name / f"{arch}__{shape}{tag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    cell = build_cell(arch, shape, mesh, **build_kw)
+    kind = cell.meta["kind"]
+    donate = (0, 1) if kind == "train" else \
+        ((1,) if kind == "decode" else ())
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        analysis = hlo_mod.analyze(compiled.as_text())
+
+    mem_stats = {k: int(getattr(mem, k)) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes")}
+    rf = costs_mod.roofline(
+        cell.cfg, shape, kind, chips,
+        hlo_flops_per_chip=analysis.dot_flops,
+        collective_bytes_per_chip=analysis.total_collective_bytes,
+        memory_stats=mem_stats,
+        collective_bytes_f32=analysis.collective_bytes_f32)
+    record = {
+        "arch": arch, "shape": shape, "mesh": mesh_name,
+        "chips": chips, "kind": kind,
+        "meta": {k: v for k, v in cell.meta.items() if k != "rules"},
+        "rules": cell.meta["rules"],
+        "memory_analysis": mem_stats,
+        "per_device_bytes": mem_stats["argument_size_in_bytes"] +
+        mem_stats["temp_size_in_bytes"] +
+        mem_stats["output_size_in_bytes"] -
+        mem_stats["alias_size_in_bytes"],
+        # XLA-CPU f32 shadow copies of bf16 buffers (absent on TPU).
+        # The estimate floors at args+outputs (real data that must be
+        # resident) since convert instances over-count shared buffers:
+        "cpu_upcast_bytes": analysis.cpu_upcast_bytes,
+        "per_device_bytes_tpu_estimate": max(
+            mem_stats["argument_size_in_bytes"] +
+            mem_stats["output_size_in_bytes"] -
+            mem_stats["alias_size_in_bytes"],
+            mem_stats["argument_size_in_bytes"] +
+            mem_stats["temp_size_in_bytes"] +
+            mem_stats["output_size_in_bytes"] -
+            mem_stats["alias_size_in_bytes"] -
+            int(analysis.cpu_upcast_bytes)),
+        "cost_analysis_flops_raw": float(cost.get("flops", 0.0)),
+        "hlo": {
+            "dot_flops_per_chip": analysis.dot_flops,
+            "collective_bytes_f32": analysis.collective_bytes_f32,
+            "collective_bytes": analysis.collective_bytes,
+            "collective_count": analysis.collective_count,
+            "loop_trips": analysis.loop_trips[:64],
+        },
+        "roofline": rf.to_dict(),
+        "timings": {"lower_s": t_lower, "compile_s": t_compile},
+    }
+    out_path.write_text(json.dumps(record, indent=1))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    todo = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                if applicable(a, s):
+                    todo.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    failures = []
+    for multi_pod in meshes:
+        for a, s in todo:
+            tag = "pod2x16x16" if multi_pod else "pod16x16"
+            try:
+                rec = run_cell(a, s, multi_pod=multi_pod,
+                               force=args.force)
+                rl = rec["roofline"]
+                tpu_gb = rec.get("per_device_bytes_tpu_estimate",
+                                 rec["per_device_bytes"]) / 1e9
+                print(f"[OK] {tag} {a} x {s}: "
+                      f"{rec['per_device_bytes'] / 1e9:.2f} GB/dev "
+                      f"(tpu-est {tpu_gb:.2f}), "
+                      f"dom={rl['dominant']}, "
+                      f"frac={rl['roofline_fraction']:.3f}, "
+                      f"compile={rec['timings']['compile_s']:.0f}s",
+                      flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures.append((tag, a, s, repr(e)))
+                print(f"[FAIL] {tag} {a} x {s}: {e!r}", flush=True)
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cell(s) failed: "
+                         f"{[(t, a, s) for t, a, s, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,321 @@
+"""Compiled-HLO analyzer: loop-aware flops / collective-bytes accounting.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, which
+under-reports scanned-layer-stack programs by ~n_layers x. This analyzer
+parses ``compiled.as_text()`` (the per-partition, post-SPMD module) and:
+
+  * recovers while-loop trip counts automatically from the loop
+    condition's ``compare(iter, constant(N))`` pattern (lax.scan shape),
+  * attributes every instruction a multiplier = product of enclosing
+    loop trips (via the computation call graph: body=/condition=/
+    to_apply=/calls= references),
+  * sums dot-general flops (2 x |out| x contraction) and collective
+    operand bytes (all-gather / all-reduce / reduce-scatter / all-to-all
+    / collective-permute), each scaled by its multiplier.
+
+Counts are per partition (the module is the per-device program), which
+is exactly what the roofline terms need (seconds on one chip).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+    "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+# Header params may contain nested tuple types: match greedily up to ->.
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_CALLREF_RE = re.compile(
+    r"(?:condition|body|to_apply|calls)=%?([\w.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+               "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[list[int]]:
+    out = []
+    for _dt, dims in _SHAPE_RE.findall(type_str):
+        out.append([int(d) for d in dims.split(",")] if dims else [])
+    return out
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    text: str          # full RHS
+    opcode: str
+    type_str: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: dict[str, Instruction]
+    is_entry: bool
+
+
+def parse_module(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = Computation(m.group(1), {},
+                                  line.strip().startswith("ENTRY"))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # rhs = "<type> <opcode>(...), attrs"
+        tm = re.match(r"((?:\([^)]*\)|\S+))\s+([\w\-]+)\(", rhs)
+        if not tm:
+            continue
+        cur.instructions[name] = Instruction(
+            name=name, text=rhs, opcode=tm.group(2),
+            type_str=tm.group(1))
+    return comps
+
+
+def _resolve_const(comp: Computation, name: str,
+                   hops: int = 4) -> int | None:
+    """Follow copies/bitcasts to an s32 constant definition."""
+    for _ in range(hops):
+        ins = comp.instructions.get(name)
+        if ins is None:
+            return None
+        cm = re.match(r"constant\((\d+)\)", ins.text.split(" ", 1)[1]
+                      if " " in ins.text else "")
+        cm = re.search(r"^\S+\s+constant\((\d+)\)", ins.text)
+        if cm:
+            return int(cm.group(1))
+        nxt = re.match(r"\S+\s+(?:copy|bitcast|convert)\(%([\w.\-]+)\)",
+                       ins.text)
+        if not nxt:
+            return None
+        name = nxt.group(1)
+    return None
+
+
+def _trip_count(comps: dict[str, Computation], cond_name: str,
+                while_ins: "Instruction", caller: Computation) -> int:
+    """Recover a scan loop's trip count.
+
+    lax.scan's condition is ``compare(iter, N), direction=LT``; N is
+    either a constant inside the condition, or a loop-invariant carry
+    element (the "wide" form) whose value is a constant in the caller's
+    init tuple. Both are resolved; fallback = largest s32 constant seen
+    in the condition (or 1).
+    """
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    # Gather candidate bound operands from LT compares.
+    for ins in cond.instructions.values():
+        if not ins.opcode == "compare" or "direction=LT" not in ins.text:
+            continue
+        ops = re.findall(r"%([\w.\-]+)", ins.text.split("compare", 1)[1])
+        for o in ops[:2]:
+            c = _resolve_const(cond, o)
+            if c is not None and c > 1:
+                return c
+            # get-tuple-element(param, index=i) -> caller init tuple.
+            gte = cond.instructions.get(o)
+            if gte is None or gte.opcode != "get-tuple-element":
+                continue
+            im = re.search(r"index=(\d+)", gte.text)
+            if not im:
+                continue
+            idx = int(im.group(1))
+            init = re.search(r"while\(%([\w.\-]+)\)", while_ins.text)
+            if not init:
+                continue
+            tup = caller.instructions.get(init.group(1))
+            if tup is None or tup.opcode != "tuple":
+                continue
+            elems = re.findall(r"%([\w.\-]+)",
+                               tup.text.split("tuple", 1)[1])
+            if idx < len(elems):
+                c = _resolve_const(caller, elems[idx])
+                if c is not None and c > 1:
+                    return c
+    # Fallback heuristic: any s32 constant in the condition body.
+    best = 1
+    for ins in cond.instructions.values():
+        cm = re.search(r"constant\((\d+)\)", ins.text)
+        if cm and ins.type_str.startswith("s32"):
+            best = max(best, int(cm.group(1)))
+    return best
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Effective execution count per computation."""
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    mult: dict[str, float] = {name: 0.0 for name in comps}
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+    # Propagate in passes (call graph is a DAG; few levels deep).
+    for _ in range(32):
+        changed = False
+        for comp in comps.values():
+            m = mult.get(comp.name, 0.0)
+            if m == 0.0:
+                continue
+            for ins in comp.instructions.values():
+                if ins.opcode == "while":
+                    body = re.search(r"body=%?([\w.\-]+)", ins.text)
+                    cond = re.search(r"condition=%?([\w.\-]+)", ins.text)
+                    if body and cond:
+                        trips = _trip_count(comps, cond.group(1),
+                                            ins, comp)
+                        new = m * trips
+                        if mult.get(body.group(1), 0.0) < new:
+                            mult[body.group(1)] = new
+                            changed = True
+                        if mult.get(cond.group(1), 0.0) < new:
+                            mult[cond.group(1)] = new
+                            changed = True
+                else:
+                    for ref in _CALLREF_RE.findall(ins.text):
+                        if mult.get(ref, 0.0) < m:
+                            mult[ref] = m
+                            changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _dot_flops(ins: Instruction,
+               comp: Computation) -> float:
+    """2 x |output| x contraction size for a dot-general."""
+    out_dims = _shape_dims(ins.type_str)
+    out_elems = 1
+    for d in (out_dims[0] if out_dims else []):
+        out_elems *= d
+    # lhs operand shape:
+    om = re.search(r"\(\s*%([\w.\-]+)", ins.text)
+    contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.text)
+    if not om or not contract:
+        return 0.0
+    lhs = comp.instructions.get(om.group(1))
+    if lhs is None:
+        return 0.0
+    lhs_dims_list = _shape_dims(lhs.type_str)
+    lhs_dims = lhs_dims_list[0] if lhs_dims_list else []
+    csize = 1
+    cdims = contract.group(1)
+    if cdims:
+        for ci in cdims.split(","):
+            idx = int(ci)
+            if idx < len(lhs_dims):
+                csize *= lhs_dims[idx]
+    return 2.0 * out_elems * csize
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    dot_flops: float                 # loop-corrected, per partition
+    collective_bytes: dict[str, float]  # per collective kind
+    collective_count: dict[str, int]
+    loop_trips: list[int]
+    # f32 collective bytes in bf16-compute programs: XLA-CPU computes
+    # dots in f32 and all-reduces the f32 partials; a TPU lowering
+    # reduces in bf16 (half the bytes). Tracked so the roofline can
+    # report a TPU-adjusted collective term.
+    collective_bytes_f32: float = 0.0
+    # XLA-CPU wraps bf16 compute in whole-buffer f32 converts (no native
+    # bf16); these shadow buffers inflate memory_analysis vs a real-TPU
+    # lowering. Sum of large (>=64 MB) bf16->f32 convert outputs:
+    cpu_upcast_bytes: float = 0.0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze(hlo_text: str) -> HloAnalysis:
+    comps = parse_module(hlo_text)
+    mult = _multipliers(comps)
+    flops = 0.0
+    cbytes: dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    ccount: dict[str, int] = {k: 0 for k in COLLECTIVES}
+    trips: list[int] = []
+    upcast = 0.0
+    f32bytes = 0.0
+    for comp in comps.values():
+        for ins in comp.instructions.values():
+            if not ins.type_str.startswith("f32"):
+                continue
+            if ins.opcode == "convert" or (
+                    ins.opcode == "fusion" and "convert" in ins.name):
+                nbytes = _shape_bytes(ins.type_str)
+                if nbytes >= 64e6:
+                    om = re.search(r"\(\s*%([\w.\-]+)", ins.text)
+                    src = comp.instructions.get(om.group(1)) if om \
+                        else None
+                    if src is None or src.type_str.startswith("bf16") \
+                            or src.opcode == "parameter":
+                        upcast += nbytes
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            m = 1.0 if comp.is_entry else 0.0
+        if m == 0.0:
+            continue
+        for ins in comp.instructions.values():
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, comp)
+            elif ins.opcode == "while":
+                cond = re.search(r"condition=%?([\w.\-]+)", ins.text)
+                if cond:
+                    trips.append(_trip_count(comps, cond.group(1),
+                                             ins, comp))
+            else:
+                for kind in COLLECTIVES:
+                    if ins.opcode.startswith(kind):
+                        # Operand bytes: prefer operand shapes (the
+                        # result of all-gather counts the gathered
+                        # size); use operand instruction types.
+                        ops = re.findall(r"%([\w.\-]+)", ins.text)
+                        ob = 0
+                        for o in ops:
+                            src = comp.instructions.get(o)
+                            if src is not None:
+                                ob += _shape_bytes(src.type_str)
+                        if ob == 0:  # fallback: result size
+                            ob = _shape_bytes(ins.type_str)
+                        cbytes[kind] += m * ob
+                        ccount[kind] += 1
+                        if ins.type_str.startswith("f32") or \
+                                ins.type_str.startswith("(f32"):
+                            f32bytes += m * ob
+                        break
+    return HloAnalysis(dot_flops=flops, collective_bytes=cbytes,
+                       collective_count=ccount, loop_trips=sorted(trips),
+                       cpu_upcast_bytes=upcast,
+                       collective_bytes_f32=f32bytes)

@@ -1,0 +1,226 @@
+"""Per-cell model configs, sharding rules, and abstract input specs.
+
+``build_cell(arch, shape, mesh)`` assembles everything the dry-run needs
+for one (architecture x input-shape x mesh) cell: the step function, the
+ShapeDtypeStruct stand-ins for every input (weak-type-correct, shardable,
+no device allocation), and in/out shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs as cfgs
+from repro.configs.shapes import SHAPES, ShapeCell, applicable
+from repro.dist import sharding as shd
+from repro.models.config import ModelConfig
+from repro.models.model import LM
+from repro.optim.adamw import AdamW
+from repro.serve.engine import cache_axes, make_serve_step
+from repro.train.step import make_train_step
+
+
+def cell_config(arch: str, shape: str, mesh: Mesh) -> ModelConfig:
+    """Full config, transformed for the cell (head padding, windows,
+    serve dtypes)."""
+    cfg = cfgs.get_config(arch)
+    cell = SHAPES[shape]
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    over: dict[str, Any] = {"head_pad_to": tp}
+    if cell.kind != "train":
+        over["param_dtype"] = "bfloat16"   # serving weights
+        over["remat"] = False
+    if arch == "jamba-v0.1-52b" and shape == "long_500k":
+        # Hybrid long-context posture: windowed attention layers, mamba
+        # layers carry the unbounded context (DESIGN.md §4).
+        over["attn_window"] = 4096
+    return dataclasses.replace(cfg, **over)
+
+
+def rules_for(cfg: ModelConfig, kind: str, mesh: Mesh) -> dict:
+    """Logical-axis rules for one cell (see DESIGN.md §5).
+
+    Baseline scheme: TP over "model" (heads/d_ff/vocab/experts), batch
+    over ("pod","data"), FSDP (params + optimizer over "data") for
+    training. KV-head fallbacks when kv_heads doesn't divide the model
+    axis: row-parallel KV weights (train/prefill) or head_dim-sharded
+    caches (decode).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    rules: dict[str, Any] = {}
+    # Params + AdamW moments in f32 = 12 bytes/param, TP-sharded.
+    param_gb_per_chip = cfg.param_count() * 12 / tp / 1e9
+    if kind == "train" and param_gb_per_chip > 5.0:
+        # Fused FSDP+TP (maxtext-style) for models whose optimizer state
+        # does not fit TP-only: parameter *output* dims shard over
+        # (model, data) jointly (ZeRO-3 semantics). Small models skip
+        # FSDP entirely — pure DP+TP costs one gradient all-reduce per
+        # step instead of per-layer weight gathers (see EXPERIMENTS
+        # §Perf iterations 1-3).
+        rules.update({
+            "d_ff": ("model", "data"),
+            "vocab": ("model", "data"),
+            "d_inner": ("model", "data"),
+            "heads_x_dim": ("model", "data"),
+            "head_dim": "data",            # FSDP for attention weights
+        })
+    if cfg.n_kv_heads % tp != 0:
+        # True-KV weight dim can't shard; the stored-KV (duplicated)
+        # activations/caches shard via the "kv_stored" rule instead.
+        rules["kv_heads"] = None
+    if kind == "decode" and cfg.attn_window is not None:
+        # Windowed decode dynamic-slices the cache along kv_seq; a
+        # seq-sharded cache would force a full-cache all-gather per
+        # layer. Shard on kv_stored instead.
+        rules["kv_seq"] = None
+    return rules
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    fn: Callable
+    args: tuple            # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    meta: dict
+
+
+def _with_activation_ctx(fn: Callable, mesh: Mesh,
+                         rules: dict) -> Callable:
+    """Trace ``fn`` under the logical activation-sharding context so
+    model-internal ``constrain()`` calls bind to this cell's rules."""
+
+    def wrapped(*args):
+        with shd.activation_sharding(mesh, rules):
+            return fn(*args)
+
+    return wrapped
+
+
+def _abstract_batch(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                    rules: dict, with_labels: bool) -> tuple[dict, dict]:
+    gb, s = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    batch = {"tokens": jax.ShapeDtypeStruct((gb, s), i32)}
+    # spec_for drops non-divisible dims (e.g. long_500k's batch of 1).
+    bsh = {"tokens": NamedSharding(mesh, shd.spec_for(
+        (gb, s), ("batch", "seq"), mesh, rules))}
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct((gb, s), i32)
+        bsh["labels"] = bsh["tokens"]
+    if cfg.frontend is not None:
+        fe = cfg.frontend
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (gb, fe.n_positions, fe.d_frontend), jnp.float32)
+        bsh["frontend"] = NamedSharding(mesh, shd.spec_for(
+            (gb, fe.n_positions, fe.d_frontend),
+            ("batch", None, None), mesh, rules))
+    return batch, bsh
+
+
+def _default_microbatches(cfg: ModelConfig, cell: ShapeCell,
+                          mesh: Mesh) -> int:
+    """Grad-accumulation depth: keep saved per-layer boundary
+    activations under ~3 GB/chip."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    b_dev = max(1, cell.global_batch // dp)
+    saved = b_dev * cell.seq_len * cfg.d_model * 2 * cfg.n_layers
+    mb = 1
+    while saved / mb > 3e9 and mb < b_dev:
+        mb *= 2
+    return mb
+
+
+def build_cell(arch: str, shape: str, mesh: Mesh,
+               rules_override: dict | None = None,
+               microbatches: int | None = None,
+               moe_dispatch: str | None = None,
+               bf16_params: bool = False) -> Cell:
+    assert applicable(arch, shape), f"{arch} x {shape} is a skip cell"
+    cell = SHAPES[shape]
+    cfg = cell_config(arch, shape, mesh)
+    if bf16_params and cell.kind == "train":
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    if moe_dispatch is not None and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch=moe_dispatch))
+    rules = rules_for(cfg, cell.kind, mesh)
+    if rules_override:
+        rules.update(rules_override)
+    model = LM(cfg)
+    p_abs = model.abstract_params()
+    p_axes = model.param_axes()
+    p_sh = shd.tree_shardings(p_axes, mesh, rules, p_abs)
+    meta = {"arch": arch, "shape": shape, "kind": cell.kind,
+            "global_batch": cell.global_batch, "seq_len": cell.seq_len,
+            "n_params": model.n_params(), "rules": {
+                k: v for k, v in rules.items()}}
+
+    if cell.kind == "train":
+        use_master = bf16_params
+        opt = AdamW(master_weights=use_master)
+        f32like = lambda: jax.tree.map(  # noqa: E731
+            lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), p_abs)
+        o_abs = {"mu": f32like(), "nu": f32like(),
+                 "count": jax.ShapeDtypeStruct((), jnp.int32)}
+        o_sh = {"mu": p_sh, "nu": p_sh,
+                "count": NamedSharding(mesh, P())}
+        if use_master:
+            o_abs["master"] = f32like()
+            o_sh["master"] = p_sh
+        batch, b_sh = _abstract_batch(cfg, cell, mesh, rules, True)
+        mb = microbatches if microbatches is not None else \
+            _default_microbatches(cfg, cell, mesh)
+        meta["microbatches"] = mb
+        fn = _with_activation_ctx(
+            make_train_step(model, opt, microbatches=mb,
+                            rwkv_chunk=_rwkv_chunk(cfg, cell)),
+            mesh, rules)
+        return Cell(arch, shape, cfg, fn, (p_abs, o_abs, batch),
+                    (p_sh, o_sh, b_sh), (p_sh, o_sh, None), meta)
+
+    if cell.kind == "prefill":
+        batch, b_sh = _abstract_batch(cfg, cell, mesh, rules, False)
+        t_max = cell.seq_len
+        if cfg.family == "vlm":
+            t_max += cfg.frontend.n_positions  # patch tokens prepended
+        fn = _with_activation_ctx(
+            lambda p, b: model.prefill(
+                p, b, t_max, rwkv_chunk=_rwkv_chunk(cfg, cell)),
+            mesh, rules)
+        return Cell(arch, shape, cfg, fn, (p_abs, batch),
+                    (p_sh, b_sh), None, meta)
+
+    # decode: one new token against a seq_len cache.
+    gb = cell.global_batch
+    t_max = cell.seq_len
+    n_memory = cfg.frontend.n_positions if cfg.family == "encdec" else 0
+    c_abs = jax.eval_shape(
+        lambda: model.init_caches(gb, t_max, n_memory=n_memory))
+    c_axes = cache_axes(model)
+    c_sh = shd.tree_shardings(c_axes, mesh, rules, c_abs)
+    tokens = jax.ShapeDtypeStruct((gb, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, shd.spec_for(
+        (gb, 1), ("batch", "seq"), mesh, rules))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = _with_activation_ctx(make_serve_step(model), mesh, rules)
+    return Cell(arch, shape, cfg, fn,
+                (p_abs, c_abs, tokens, pos),
+                (p_sh, c_sh, tok_sh, NamedSharding(mesh, P())),
+                (tok_sh, None, c_sh), meta)
+
+
+def _rwkv_chunk(cfg: ModelConfig, cell: ShapeCell) -> int | None:
+    """Chunked (block-parallel) RWKV for full-sequence cells."""
+    if cfg.family != "ssm" or cell.kind == "decode":
+        return None
+    return 256 if cell.seq_len % 256 == 0 else None

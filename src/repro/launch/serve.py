@@ -1,0 +1,61 @@
+"""Serving launcher: batched prefill+decode (reduced config) or the
+decode-cell dry-run on the production mesh.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --new 16
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b \
+      --shape decode_32k --dry-run
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new", type=int, default=12)
+    args = ap.parse_args()
+
+    if args.dry_run:
+        import subprocess
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.call(cmd))
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models.model import LM
+    from repro.serve.engine import Engine
+
+    cfg = get_reduced(args.arch)
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len),
+                                 0, cfg.vocab)
+    frontend = None
+    if cfg.frontend is not None:
+        frontend = jax.random.normal(
+            key, (args.batch, cfg.frontend.n_positions,
+                  cfg.frontend.d_frontend), jnp.float32)
+    n_front = cfg.frontend.n_positions if cfg.family == "vlm" else 0
+    engine = Engine(model, params,
+                    t_max=args.prompt_len + n_front + args.new + 1)
+    out = engine.generate(prompts, args.new, frontend=frontend)
+    for b in range(args.batch):
+        print(f"seq{b}: {out[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Training launcher.
+
+Two modes:
+  * real run (CPU-sized by default): reduced config, synthetic data,
+    checkpoints, straggler monitoring — the same loop a pod would run.
+  * ``--dry-run``: lower+compile the full config on the production mesh
+    (delegates to repro.launch.dryrun; no allocation).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --steps 100
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-32b \
+      --shape train_4k --dry-run [--multi-pod]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--dry-run", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro-train")
+    args = ap.parse_args()
+
+    if args.dry_run:
+        # Re-exec the dryrun module so XLA_FLAGS is set before jax init.
+        import subprocess
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.call(cmd))
+
+    import jax
+
+    from repro.checkpoint.store import CheckpointStore
+    from repro.configs import get_reduced
+    from repro.data.pipeline import DataConfig, batch_for
+    from repro.ft.restart import LoopConfig, TrainLoop
+    from repro.models.model import LM
+    from repro.optim.adamw import AdamW, warmup_cosine
+    from repro.train.step import make_train_step
+
+    cfg = get_reduced(args.arch)
+    model = LM(cfg)
+    print(f"{cfg.name}: {model.n_params():,} params")
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(learning_rate=warmup_cosine(3e-3, 20, args.steps))
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      vocab=cfg.vocab, packed=True)
+    step = jax.jit(make_train_step(model, opt))
+    loop = TrainLoop(step, lambda s: batch_for(dcfg, s, cfg),
+                     CheckpointStore(args.ckpt_dir),
+                     LoopConfig(total_steps=args.steps, ckpt_every=50))
+    loop.run(params, opt.init(params))
+    for h in loop.history:
+        print(f"step {int(h['step']):5d}  loss {h['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

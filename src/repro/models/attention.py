@@ -1,0 +1,315 @@
+"""Memory-efficient GQA attention (XLA path).
+
+Streaming (flash-style) softmax over KV blocks in pure JAX: memory per
+step is O(block_q * block_k) instead of O(S^2), which is what makes the
+prefill_32k and train_4k cells compile within HBM. The Pallas TPU kernel
+in ``repro/kernels/flash_attention`` implements the same contraction for
+real-TPU execution; models default to this XLA path so the 512-device
+CPU dry-run lowers without an interpreter graph.
+
+Supports: causal & sliding-window masks, cross-attention, KV-cache
+decode, optional logit softcap, QKV biases (qwen2.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import rope
+from repro.models.params import Spec
+
+NEG_INF = -1e30
+
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    hq, hkv = cfg.n_heads_padded, cfg.n_kv_heads
+    # KV projections use a distinct logical axis for their input dim so
+    # per-arch rules can switch them to row-parallel when kv_heads does
+    # not divide the model axis (see launch.inputs.rules_for).
+    out = {
+        "wq": Spec((d, hq, dh), ("d_model", "heads", "head_dim")),
+        "wk": Spec((d, hkv, dh), ("d_model_kv", "kv_heads", "head_dim")),
+        "wv": Spec((d, hkv, dh), ("d_model_kv", "kv_heads", "head_dim")),
+        "wo": Spec((hq, dh, d), ("heads", "head_dim", "d_model")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = Spec((hq, dh), ("heads", "head_dim"), init="zeros")
+        out["bk"] = Spec((hkv, dh), ("kv_heads", "head_dim"), init="zeros")
+        out["bv"] = Spec((hkv, dh), ("kv_heads", "head_dim"), init="zeros")
+    return out
+
+
+def slot_is_real(cfg: ModelConfig) -> list[bool]:
+    """Validity per padded q-head slot (see ModelConfig.head_layout).
+
+    Slots are arranged as K stored-KV groups of g_p; stored copy
+    c = (slot_group % r) covers real heads [c*g_p, min((c+1)*g_p, g))
+    of its true KV head."""
+    k, g_p, hq_p = cfg.head_layout()
+    r = k // cfg.n_kv_heads
+    g = cfg.n_heads // cfg.n_kv_heads
+    out = []
+    for h in range(hq_p):
+        s, i = divmod(h, g_p)
+        c = s % r
+        out.append(c * g_p + i < g)
+    return out
+
+
+def slot_to_real(cfg: ModelConfig) -> list[int | None]:
+    """Real head index per slot (None for dummy slots) — tests use this
+    to check padded == unpadded exactness."""
+    k, g_p, hq_p = cfg.head_layout()
+    r = k // cfg.n_kv_heads
+    g = cfg.n_heads // cfg.n_kv_heads
+    out = []
+    for h in range(hq_p):
+        s, i = divmod(h, g_p)
+        j, c = divmod(s, r)
+        real = j * g + c * g_p + i
+        out.append(real if c * g_p + i < g else None)
+    return out
+
+
+def head_mask(cfg: ModelConfig) -> jax.Array | None:
+    """1 for real q-head slots, 0 for padding slots."""
+    if cfg.n_heads_padded == cfg.n_heads and \
+            cfg.head_layout()[0] == cfg.n_kv_heads:
+        return None
+    return jnp.asarray(slot_is_real(cfg))
+
+
+def repeat_kv(cfg: ModelConfig, kv: jax.Array) -> jax.Array:
+    """Duplicate KV heads to the stored-KV width K = r * hkv.
+
+    Activation-level (and cache-level) duplication: the weights stay
+    un-duplicated (exact GQA semantics; duplicated activations receive
+    summed gradients). 2x KV bytes for r=2, in exchange for an evenly
+    sharded stored-KV dim — the vLLM-style TP answer to hkv < tp."""
+    k = cfg.head_layout()[0]
+    r = k // cfg.n_kv_heads
+    if r == 1:
+        return kv
+    idx = jnp.asarray([t // r for t in range(k)])
+    return jnp.take(kv, idx, axis=2)
+
+
+def project_qkv(p: dict, xq: jax.Array, xkv: jax.Array, cfg: ModelConfig):
+    dt = xq.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xq, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xkv, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xkv, p["wv"].astype(dt))
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    return q, k, v
+
+
+def out_proj(p: dict, o: jax.Array, cfg: ModelConfig) -> jax.Array:
+    hm = head_mask(cfg)
+    if hm is not None:
+        # Zero padding heads: exact n_heads semantics (and zero grads
+        # into the dummy slices of wq/wo).
+        o = o * hm[None, None, :, None].astype(o.dtype)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(o.dtype))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_k", "softcap"))
+def streaming_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_positions: jax.Array,
+                        kv_positions: jax.Array,
+                        kv_valid: jax.Array,
+                        *, causal: bool = True,
+                        window: int | None = None,
+                        block_k: int = 1024,
+                        softcap: float | None = None) -> jax.Array:
+    """Online-softmax attention over KV blocks.
+
+    q: (B, Sq, Hq, Dh);  k, v: (B, T, K, Dh) where K is the stored-KV
+    width (after repeat_kv) and Hq = g_p * K.
+    q_positions: (Sq,), kv_positions: (T,), kv_valid: (T,) bool.
+    """
+    b, sq, hq, dh = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    hkv_eff, g = hkv, hq // hkv
+    scale = dh ** -0.5
+
+    pad = (-t) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad))
+        kv_valid = jnp.pad(kv_valid, (0, pad))
+    nk = (t + pad) // block_k
+
+    ha = "kv_stored"
+    qh = (q * scale).astype(jnp.float32).reshape(b, sq, hkv_eff, g, dh)
+    qh = qh.transpose(0, 2, 3, 1, 4)                # (B,Hkv,G,Sq,Dh)
+    qh = constrain(qh, ("batch", ha, None, None, None))
+    kb = k.reshape(b, nk, block_k, hkv, dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, block_k, hkv, dh).transpose(1, 0, 3, 2, 4)
+    kb = constrain(kb, (None, "batch", ha, None, None))
+    vb = constrain(vb, (None, "batch", ha, None, None))
+    pos_b = kv_positions.reshape(nk, block_k)
+    val_b = kv_valid.reshape(nk, block_k)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kk, vv, kp, kval = blk                      # (B,K,bk,Dh)...
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qh,
+                       kk.astype(jnp.float32))
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = kval[None, :]                        # (1, bk)
+        if causal:
+            mask = mask & (kp[None, :] <= q_positions[:, None])
+        if window is not None:
+            mask = mask & (kp[None, :] >
+                           q_positions[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        # Fully-masked blocks: exp(-inf - -inf) == 1; zero them explicitly.
+        p = p * mask[None, None, None]
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vv.astype(jnp.float32))
+        m_new = constrain(m_new, ("batch", ha, None, None))
+        l_new = constrain(l_new, ("batch", ha, None, None))
+        acc_new = constrain(acc_new, ("batch", ha, None, None, None))
+        return (m_new, l_new, acc_new), None
+
+    m0 = constrain(jnp.full((b, hkv_eff, g, sq), NEG_INF, jnp.float32),
+                   ("batch", ha, None, None))
+    l0 = constrain(jnp.zeros((b, hkv_eff, g, sq), jnp.float32),
+                   ("batch", ha, None, None))
+    a0 = constrain(jnp.zeros((b, hkv_eff, g, sq, dh), jnp.float32),
+                   ("batch", ha, None, None, None))
+    # Nested remat: recompute block scores in the backward pass instead
+    # of saving the (B,H,Sq,block_k) score tensors per block (the
+    # flash-attention memory posture, expressed through autodiff).
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kb, vb, pos_b, val_b))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)
+    return out.astype(q.dtype)
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Preallocated decode cache for one attention layer stack.
+
+    k, v: (L, B, T_max, Hkv, Dh). Position bookkeeping lives with the
+    caller (a single scalar since batched decode is position-aligned).
+    """
+
+    k: jax.Array
+    v: jax.Array
+
+    @staticmethod
+    def zeros(n_layers: int, batch: int, t_max: int, cfg: ModelConfig,
+              dtype) -> "KVCache":
+        shape = (n_layers, batch, t_max, cfg.n_kv_heads, cfg.head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v"], meta_fields=[])
+
+
+def attn_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                 positions: jax.Array, *, causal: bool = True,
+                 memory: jax.Array | None = None,
+                 memory_valid: jax.Array | None = None,
+                 block_k: int = 1024) -> jax.Array:
+    """Full-sequence attention (training / prefill / encoder / cross)."""
+    xkv = memory if memory is not None else x
+    q, k, v = project_qkv(p, x, xkv, cfg)
+    if memory is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        kv_pos = positions
+        kv_val = jnp.ones(xkv.shape[1], bool)
+    else:
+        kv_pos = jnp.arange(xkv.shape[1])
+        kv_val = memory_valid if memory_valid is not None \
+            else jnp.ones(xkv.shape[1], bool)
+        causal = False
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    o = streaming_attention(
+        q, repeat_kv(cfg, k), repeat_kv(cfg, v), positions, kv_pos,
+        kv_val, causal=causal, window=cfg.attn_window, block_k=block_k,
+        softcap=cfg.attn_logit_softcap)
+    o = constrain(o, ("batch", "seq", "heads", "head_dim"))
+    return out_proj(p, o, cfg)
+
+
+def _decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      pos: jax.Array, kv_pos: jax.Array,
+                      *, window: int | None,
+                      softcap: float | None) -> jax.Array:
+    """Direct (scan-free) attention for Sq == 1.
+
+    The streaming path's reshape/transpose of the cache into scan
+    operands copies the whole cache per layer — tens of GB at decode
+    shapes. For one query the scores tensor is only (B, Hq, T) f32, so
+    plain masked softmax is both smaller and collective-free.
+    """
+    b, _, hq, dh = q.shape
+    t, kk = k.shape[1], k.shape[2]
+    g = hq // kk
+    qh = (q[:, 0].reshape(b, kk, g, dh) * dh ** -0.5).astype(jnp.float32)
+    qh = constrain(qh, ("batch", "kv_stored", None, None))
+    s = jnp.einsum("bkgd,btkd->bkgt", qh, k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = kv_pos <= pos
+    if window is not None:
+        mask = mask & (kv_pos > pos - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", pr, v.astype(jnp.float32))
+    return o.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+def attn_decode(p: dict, x: jax.Array, cfg: ModelConfig,
+                pos: jax.Array, cache_k: jax.Array, cache_v: jax.Array,
+                *, block_k: int = 1024):
+    """Single-token decode. x: (B, 1, D); cache_*: (B, T, K, Dh).
+
+    Returns (out (B, 1, D), new_cache_k, new_cache_v).
+    """
+    q, k, v = project_qkv(p, x, x, cfg)
+    q = rope(q, pos[None], cfg.rope_theta)
+    k = rope(k, pos[None], cfg.rope_theta)
+    # The cache stores the duplicated (stored-KV width) heads so it
+    # shards evenly on the model axis.
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, repeat_kv(cfg, k).astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, repeat_kv(cfg, v).astype(cache_v.dtype), (0, pos, 0, 0))
+    t = cache_k.shape[1]
+    k_att, v_att = cache_k, cache_v
+    kv_pos = jnp.arange(t)
+    if cfg.attn_window is not None and t > 2 * cfg.attn_window:
+        # Long-context windowed decode: only the trailing window can
+        # attend — slice it out instead of scanning the whole cache.
+        w = cfg.attn_window
+        start = jnp.clip(pos + 1 - w, 0, t - w)
+        k_att = jax.lax.dynamic_slice_in_dim(cache_k, start, w, axis=1)
+        v_att = jax.lax.dynamic_slice_in_dim(cache_v, start, w, axis=1)
+        kv_pos = start + jnp.arange(w)
+    o = _decode_attention(q, k_att, v_att, pos, kv_pos,
+                          window=cfg.attn_window,
+                          softcap=cfg.attn_logit_softcap)
+    return out_proj(p, o, cfg), cache_k, cache_v

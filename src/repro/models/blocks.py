@@ -1,0 +1,176 @@
+"""Transformer/SSM block assembly: pre-norm mixer + (dense|MoE) MLP.
+
+A :class:`LayerDesc` describes one layer of a repeating *period*:
+mixer kind (attn / mamba / rwkv), MoE or dense MLP, optional
+cross-attention sublayer (enc-dec decoder), causal or bidirectional.
+Periods are scanned with stacked parameters; layers inside a period are
+python-unrolled (heterogeneous kinds allowed — Jamba's 1:7 interleave).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import rwkv6 as rwk
+from repro.models.config import ModelConfig
+from repro.models.layers import mlp, mlp_specs, norm_spec, rmsnorm
+from repro.models.moe import moe_mlp, moe_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDesc:
+    kind: str               # attn | mamba | rwkv
+    moe: bool = False
+    cross: bool = False
+    causal: bool = True
+
+
+def block_specs(cfg: ModelConfig, desc: LayerDesc) -> dict:
+    d = cfg.d_model
+    out: dict = {"norm_mix": norm_spec(d)}
+    if desc.kind == "attn":
+        out["mixer"] = attn.attention_specs(cfg)
+    elif desc.kind == "mamba":
+        out["mixer"] = mam.mamba_specs(cfg)
+    elif desc.kind == "rwkv":
+        out["mixer"] = rwk.rwkv_specs(cfg)
+    else:
+        raise ValueError(desc.kind)
+    if desc.cross:
+        out["norm_cross"] = norm_spec(d)
+        out["cross"] = attn.attention_specs(cfg)
+    out["norm_mlp"] = norm_spec(d)
+    out["mlp"] = moe_specs(cfg) if desc.moe else mlp_specs(cfg)
+    return out
+
+
+def _mlp_part(p: dict, x: jax.Array, cfg: ModelConfig, desc: LayerDesc,
+              moe_capacity: int | None = None):
+    h = rmsnorm(x, p["norm_mlp"], cfg.rms_eps)
+    if desc.moe:
+        y, aux = moe_mlp(p["mlp"], h, cfg, capacity=moe_capacity)
+    else:
+        y, aux = mlp(p["mlp"], h, cfg.mlp), 0.0
+    return x + y, aux
+
+
+def block_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                  desc: LayerDesc, positions: jax.Array,
+                  memory: jax.Array | None = None,
+                  memory_valid: jax.Array | None = None,
+                  rwkv_chunk: int | None = None):
+    """Full-sequence mode (training / encoding). Returns (x, aux)."""
+    h = rmsnorm(x, p["norm_mix"], cfg.rms_eps)
+    if desc.kind == "attn":
+        y = attn.attn_forward(p["mixer"], h, cfg, positions,
+                              causal=desc.causal)
+    elif desc.kind == "mamba":
+        y, _ = mam.mamba_forward(p["mixer"], h, cfg)
+    else:
+        y, _ = rwk.rwkv_forward(p["mixer"], h, cfg, chunk=rwkv_chunk)
+    x = x + y
+    if desc.cross:
+        h = rmsnorm(x, p["norm_cross"], cfg.rms_eps)
+        x = x + attn.attn_forward(p["cross"], h, cfg, positions,
+                                  memory=memory,
+                                  memory_valid=memory_valid)
+    return _mlp_part(p, x, cfg, desc)
+
+
+def init_cache(cfg: ModelConfig, desc: LayerDesc, batch: int,
+               t_max: int, n_memory: int, dtype) -> dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    hkv = cfg.head_layout()[0]   # stored-KV width (duplicated heads)
+    if desc.kind == "attn":
+        c = {"k": jnp.zeros((batch, t_max, hkv, dh), dtype),
+             "v": jnp.zeros((batch, t_max, hkv, dh), dtype)}
+    elif desc.kind == "mamba":
+        di = cfg.mamba_expand * d
+        c = {"conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype),
+             "h": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32)}
+    else:
+        n = cfg.rwkv_head_dim
+        c = {"shift": jnp.zeros((batch, d), dtype),
+             "s": jnp.zeros((batch, d // n, n, n), jnp.float32)}
+    if desc.cross:
+        c["ck"] = jnp.zeros((batch, n_memory, hkv, dh), dtype)
+        c["cv"] = jnp.zeros((batch, n_memory, hkv, dh), dtype)
+    return c
+
+
+def block_prefill(p: dict, x: jax.Array, cfg: ModelConfig,
+                  desc: LayerDesc, positions: jax.Array, t_max: int,
+                  memory: jax.Array | None = None,
+                  rwkv_chunk: int | None = None):
+    """Like block_forward but also returns the decode cache entry."""
+    b, s, _ = x.shape
+    h = rmsnorm(x, p["norm_mix"], cfg.rms_eps)
+    cache: dict = {}
+    if desc.kind == "attn":
+        q, k, v = attn.project_qkv(p["mixer"], h, h, cfg)
+        q = attn.rope(q, positions, cfg.rope_theta)
+        k = attn.rope(k, positions, cfg.rope_theta)
+        kv_val = jnp.ones(s, bool)
+        k_rep, v_rep = attn.repeat_kv(cfg, k), attn.repeat_kv(cfg, v)
+        o = attn.streaming_attention(
+            q, k_rep, v_rep,
+            positions, positions, kv_val, causal=desc.causal,
+            window=cfg.attn_window, softcap=cfg.attn_logit_softcap)
+        y = attn.out_proj(p["mixer"], o, cfg)
+        pad = t_max - s
+        cache["k"] = jnp.pad(k_rep, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache["v"] = jnp.pad(v_rep, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    elif desc.kind == "mamba":
+        y, (conv, hst) = mam.mamba_forward(p["mixer"], h, cfg)
+        cache["conv"], cache["h"] = conv, hst
+    else:
+        y, (shift, sst) = rwk.rwkv_forward(p["mixer"], h, cfg,
+                                           chunk=rwkv_chunk)
+        cache["shift"], cache["s"] = shift, sst
+    x = x + y
+    if desc.cross:
+        hc = rmsnorm(x, p["norm_cross"], cfg.rms_eps)
+        qc, ck, cv = attn.project_qkv(p["cross"], hc, memory, cfg)
+        kv_pos = jnp.arange(memory.shape[1])
+        ck, cv = attn.repeat_kv(cfg, ck), attn.repeat_kv(cfg, cv)
+        o = attn.streaming_attention(
+            qc, ck, cv,
+            positions, kv_pos,
+            jnp.ones(memory.shape[1], bool), causal=False)
+        x = x + attn.out_proj(p["cross"], o, cfg)
+        cache["ck"], cache["cv"] = ck, cv
+    x, aux = _mlp_part(p, x, cfg, desc)
+    return x, aux, cache
+
+
+def block_decode(p: dict, x: jax.Array, cfg: ModelConfig,
+                 desc: LayerDesc, pos: jax.Array, cache: dict):
+    """Single-token step. x: (B, 1, d). Returns (x, new_cache)."""
+    cache = dict(cache)
+    h = rmsnorm(x, p["norm_mix"], cfg.rms_eps)
+    if desc.kind == "attn":
+        y, cache["k"], cache["v"] = attn.attn_decode(
+            p["mixer"], h, cfg, pos, cache["k"], cache["v"])
+    elif desc.kind == "mamba":
+        y, (cache["conv"], cache["h"]) = mam.mamba_decode(
+            p["mixer"], h, cfg, (cache["conv"], cache["h"]))
+    else:
+        y, (cache["shift"], cache["s"]) = rwk.rwkv_decode(
+            p["mixer"], h, cfg, (cache["shift"], cache["s"]))
+    x = x + y
+    if desc.cross:
+        hc = rmsnorm(x, p["norm_cross"], cfg.rms_eps)
+        q = attn.project_qkv(p["cross"], hc, hc, cfg)[0]
+        t = cache["ck"].shape[1]
+        o = attn._decode_attention(
+            q, cache["ck"], cache["cv"],
+            jnp.asarray(t, jnp.int32), jnp.arange(t),
+            window=None, softcap=None)
+        x = x + attn.out_proj(p["cross"], o, cfg)
+    # Decode is dropless: capacity = token count (exact routing).
+    x, _ = _mlp_part(p, x, cfg, desc, moe_capacity=x.shape[0])
+    return x, cache

@@ -1,0 +1,97 @@
+"""Shared neural layers: norms, MLP variants, rotary embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.params import Spec
+
+
+# -- norms -------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * rms).astype(dt) * scale.astype(dt)
+
+
+def norm_spec(d: int) -> Spec:
+    return Spec((d,), ("d_model",), init="ones")
+
+
+# -- rotary position embeddings ----------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP variants --------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wi": Spec((d, f), ("d_model", "d_ff")),
+            "wg": Spec((d, f), ("d_model", "d_ff")),
+            "wo": Spec((f, d), ("d_ff", "d_model")),
+        }
+    return {
+        "wi": Spec((d, f), ("d_model", "d_ff")),
+        "wo": Spec((f, d), ("d_ff", "d_model")),
+    }
+
+
+def mlp(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    h = x @ p["wi"].astype(x.dtype)
+    h = constrain(h, ("batch", "seq", "d_ff"))
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(x.dtype)) * h
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(x.dtype)) * h
+    elif kind == "relu2":               # squared ReLU (Primer / nemotron)
+        h = jnp.square(jax.nn.relu(h))
+    elif kind == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return constrain(h @ p["wo"].astype(x.dtype),
+                     ("batch", "seq", "d_model"))
+
+
+# -- embeddings ----------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    out = {"tokens": Spec((v, d), ("vocab", "d_model"), scale=1.0)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = Spec((d, v), ("d_model", "vocab"))
+    if cfg.frontend is not None:
+        out["frontend_proj"] = Spec(
+            (cfg.frontend.d_frontend, d), ("d_frontend", "d_model"))
+    return out
+
+
+def embed_tokens(p: dict, tokens: jax.Array, dtype) -> jax.Array:
+    return constrain(p["tokens"].astype(dtype)[tokens],
+                     ("batch", "seq", "d_model"))
+
+
+def logits_out(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        out = x @ p["tokens"].astype(x.dtype).T
+    else:
+        out = x @ p["lm_head"].astype(x.dtype)
+    return constrain(out, ("batch", "seq", "vocab"))

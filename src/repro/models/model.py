@@ -1,0 +1,263 @@
+"""The language model: embeddings -> scanned period stacks -> logits.
+
+Design notes (scale posture):
+
+  * All layer stacks are ``lax.scan`` over *periods* with stacked
+    parameters, so lowering/compile cost is O(period), not O(depth) —
+    required for the 64-layer qwen2.5-32b dry-run on one CPU core.
+  * Heterogeneous architectures (Jamba's 1:7 attn:mamba interleave with
+    MoE every other layer) unroll the repeating pattern *inside* the
+    scanned period.
+  * The vocab is padded up to a multiple of ``VOCAB_PAD`` so the
+    embedding/lm_head shard evenly on the model axis (Megatron-style);
+    labels never index the padding.
+  * Modality frontends ([audio]/[vlm]) are stubs per the brief: the
+    batch carries precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as prm
+from repro.models.blocks import (LayerDesc, block_decode, block_forward,
+                                 block_prefill, block_specs, init_cache)
+from repro.models.config import ModelConfig
+from repro.models.layers import (embed_specs, embed_tokens, logits_out,
+                                 norm_spec, rmsnorm)
+from repro.models.params import Spec, stack_specs
+
+VOCAB_PAD = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    name: str
+    descs: tuple[LayerDesc, ...]
+    n_periods: int
+    causal: bool = True
+
+
+def _padded_vocab(v: int) -> int:
+    return (v + VOCAB_PAD - 1) // VOCAB_PAD * VOCAB_PAD
+
+
+def _period_layout(cfg: ModelConfig) -> tuple[LayerDesc, ...]:
+    """Repeating layer pattern (length divides n_layers)."""
+    kinds = cfg.block_kinds()
+    period = len(cfg.pattern) if cfg.pattern else 1
+    if cfg.moe is not None:
+        # MoE cadence must align with the period.
+        import math
+        period = math.lcm(period, cfg.moe_every)
+    assert cfg.n_layers % period == 0
+    descs = []
+    for i in range(period):
+        descs.append(LayerDesc(kind=kinds[i], moe=cfg.is_moe_layer(i),
+                               cross=cfg.family == "encdec",
+                               causal=True))
+    return tuple(descs)
+
+
+class LM:
+    """Decoder LM; also hosts enc-dec (whisper) and VLM variants."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = dataclasses.replace(cfg, vocab=_padded_vocab(cfg.vocab))
+        self.vocab_real = cfg.vocab
+        descs = _period_layout(self.cfg)
+        self.stages = [Stage("decoder", descs,
+                             self.cfg.n_layers // len(descs))]
+        if self.cfg.family == "encdec":
+            enc_desc = (LayerDesc(kind="attn", causal=False),)
+            self.enc_stage = Stage("encoder", enc_desc,
+                                   self.cfg.n_encoder_layers,
+                                   causal=False)
+        else:
+            self.enc_stage = None
+
+    # -- parameters --------------------------------------------------------
+    def specs(self) -> dict:
+        cfg = self.cfg
+        out: dict = {"embed": embed_specs(cfg)}
+        for st in [s for s in [self.enc_stage] if s] + self.stages:
+            period = {str(i): block_specs(cfg, d)
+                      for i, d in enumerate(st.descs)}
+            out[st.name] = stack_specs(period, st.n_periods)
+        out["final_norm"] = norm_spec(cfg.d_model)
+        if self.enc_stage:
+            out["enc_norm"] = norm_spec(cfg.d_model)
+        return out
+
+    def init(self, key: jax.Array) -> dict:
+        return prm.init(self.specs(), key,
+                        dtype=jnp.dtype(self.cfg.param_dtype))
+
+    def param_axes(self) -> dict:
+        return prm.axes(self.specs())
+
+    def abstract_params(self) -> dict:
+        return prm.abstract(self.specs(),
+                            dtype=jnp.dtype(self.cfg.param_dtype))
+
+    def n_params(self) -> int:
+        return prm.count(self.specs())
+
+    # -- stacks --------------------------------------------------------------
+    def _run_stage(self, stage: Stage, p_stage: dict, x: jax.Array,
+                   positions: jax.Array,
+                   memory: jax.Array | None = None,
+                   memory_valid: jax.Array | None = None,
+                   rwkv_chunk: int | None = None):
+        cfg = self.cfg
+
+        def period_fn(x, p_period):
+            aux = 0.0
+            for i, desc in enumerate(stage.descs):
+                d = dataclasses.replace(desc, causal=stage.causal)
+                x, a = block_forward(
+                    p_period[str(i)], x, cfg, d, positions,
+                    memory=memory, memory_valid=memory_valid,
+                    rwkv_chunk=rwkv_chunk)
+                aux = aux + a
+            return x, aux
+
+        if cfg.remat:
+            period_fn = jax.checkpoint(period_fn)
+
+        def scan_body(carry, p_period):
+            x, aux = carry
+            x, a = period_fn(x, p_period)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_body, (x, 0.0), p_stage)
+        return x, aux
+
+    # -- embedding frontends ----------------------------------------------------
+    def _embed_inputs(self, params: dict, batch: dict):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        tok = embed_tokens(params["embed"], batch["tokens"], dt)
+        n_front = 0
+        if cfg.family == "vlm":
+            fe = batch["frontend"].astype(dt) @ \
+                params["embed"]["frontend_proj"].astype(dt)
+            tok = jnp.concatenate([fe, tok], axis=1)
+            n_front = fe.shape[1]
+        return tok, n_front
+
+    def _encode(self, params: dict, batch: dict):
+        """Encoder side (whisper): frontend embeddings -> memory."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = batch["frontend"].astype(dt) @ \
+            params["embed"]["frontend_proj"].astype(dt)
+        pos = jnp.arange(x.shape[1])
+        x, _ = self._run_stage(self.enc_stage, params["encoder"], x, pos)
+        return rmsnorm(x, params["enc_norm"], cfg.rms_eps)
+
+    # -- training forward ----------------------------------------------------
+    def forward(self, params: dict, batch: dict,
+                rwkv_chunk: int | None = None):
+        """Returns (logits over text positions, aux losses)."""
+        cfg = self.cfg
+        memory = None
+        if self.enc_stage is not None:
+            memory = self._encode(params, batch)
+        x, n_front = self._embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+        x, aux = self._run_stage(self.stages[0], params["decoder"], x,
+                                 positions, memory=memory,
+                                 rwkv_chunk=rwkv_chunk)
+        x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+        if n_front:
+            x = x[:, n_front:]
+        return logits_out(params["embed"], x, cfg), aux
+
+    def loss(self, params: dict, batch: dict,
+             rwkv_chunk: int | None = None):
+        """Next-token CE (+ z-loss + MoE aux). labels: (B, S) int32,
+        -1 = ignore."""
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch, rwkv_chunk=rwkv_chunk)
+        labels = batch["labels"]
+        lf = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(
+            lf, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+        mask = (labels >= 0).astype(jnp.float32)
+        ce = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        zl = cfg.z_loss * ((lse ** 2) * mask).sum() / \
+            jnp.maximum(mask.sum(), 1.0)
+        total = ce + zl + aux
+        return total, {"ce": ce, "z_loss": zl, "aux": aux}
+
+    # -- serving ----------------------------------------------------------------
+    def init_caches(self, batch: int, t_max: int,
+                    n_memory: int = 0) -> list:
+        """Stacked (n_periods-leading) cache pytrees per stage."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        st = self.stages[0]
+
+        def one(desc):
+            return init_cache(cfg, desc, batch, t_max, n_memory, dt)
+
+        period = {str(i): one(d) for i, d in enumerate(st.descs)}
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (st.n_periods, *a.shape)).copy(), period)
+
+    def prefill(self, params: dict, batch: dict, t_max: int,
+                rwkv_chunk: int | None = None):
+        """Run the prompt; returns (last-position logits, caches)."""
+        cfg = self.cfg
+        memory = None
+        if self.enc_stage is not None:
+            memory = self._encode(params, batch)
+        x, n_front = self._embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+        st = self.stages[0]
+
+        def period_fn(x, p_period):
+            caches = {}
+            for i, desc in enumerate(st.descs):
+                x, _, c = block_prefill(
+                    p_period[str(i)], x, cfg, desc, positions, t_max,
+                    memory=memory, rwkv_chunk=rwkv_chunk)
+                caches[str(i)] = c
+            return x, caches
+
+        def scan_body(x, p_period):
+            return period_fn(x, p_period)
+
+        x, caches = jax.lax.scan(scan_body, x, params["decoder"])
+        x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+        logits = logits_out(params["embed"], x[:, -1:], cfg)
+        return logits, caches
+
+    def decode_step(self, params: dict, tokens: jax.Array,
+                    pos: jax.Array, caches):
+        """One token for every sequence. tokens: (B, 1). pos: scalar
+        (position of the new token). Returns (logits, new caches)."""
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = embed_tokens(params["embed"], tokens, dt)
+        st = self.stages[0]
+
+        def scan_body(x, per):
+            p_period, cache_period = per
+            new_caches = {}
+            for i, desc in enumerate(st.descs):
+                x, c = block_decode(p_period[str(i)], x, cfg, desc,
+                                    pos, cache_period[str(i)])
+                new_caches[str(i)] = c
+            return x, new_caches
+
+        x, new_caches = jax.lax.scan(scan_body, x,
+                                     (params["decoder"], caches))
+        x = rmsnorm(x, params["final_norm"], cfg.rms_eps)
+        return logits_out(params["embed"], x, cfg), new_caches

@@ -1,0 +1,176 @@
+"""Mixture-of-experts MLP (DeepSeekMoE-style: shared + routed top-k).
+
+GShard-grouped dispatch: tokens are grouped by the batch dim (one group
+per sequence — groups shard over "data", experts over "model"), and the
+capacity C is *per group*: C = ceil(S * top_k * cf / E). Dispatch/
+combine tensors are (B, S, E, C) — device-local slices of a few hundred
+MB, never global. Two strategies, selected by ``MoeConfig.dispatch``:
+
+  * ``einsum`` — one-hot dispatch/combine matmuls on the MXU (the
+    paper-era TPU baseline). Dispatch flops ~ S*E*C*d per group rival
+    the expert flops at these shapes — visible as HLO-vs-model flops
+    overhead in §Roofline.
+
+  * ``gather`` — beyond-paper optimization: take/segment-style dispatch
+    costing O(k * S * d) per group. Identical routing + capacity-drop
+    semantics, far lower HLO flops; the MoE hillclimb in EXPERIMENTS
+    §Perf measures the swap.
+
+Routing: softmax over expert logits, top-k, renormalized weights;
+Switch-style load-balancing auxiliary loss returned alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import constrain
+from repro.models.config import ModelConfig, MoeConfig
+from repro.models.layers import mlp, mlp_specs
+from repro.models.params import Spec, stack_specs
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    assert cfg.moe is not None
+    mc = cfg.moe
+    de = mc.d_expert or cfg.d_ff
+    out = {
+        "router": Spec((cfg.d_model, mc.n_experts),
+                       ("d_model", "experts")),
+        "experts": stack_specs(mlp_specs(cfg, de), mc.n_experts,
+                               "experts"),
+    }
+    if mc.n_shared:
+        out["shared"] = mlp_specs(cfg, de * mc.n_shared)
+    return out
+
+
+def _routing(router_logits: jax.Array, mc: MoeConfig):
+    """Top-k routing per token. logits: (B, S, E).
+
+    Returns (weights (B,S,k), experts (B,S,k), aux_loss)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, mc.top_k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss: E * sum_e f_e * p_e.
+    b, s, e = probs.shape
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.float32)   # (B,S,k,E)
+    f = onehot.mean(axis=(0, 1, 2))
+    p = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(f * p) * mc.router_aux_weight
+    return top_w, top_e, aux
+
+
+def _capacity(s: int, mc: MoeConfig, override: int | None = None) -> int:
+    """Per-group expert capacity."""
+    if override is not None:
+        return min(s, override)
+    c = int(s * mc.top_k * mc.capacity_factor / mc.n_experts) + 1
+    return max(1, min(s, c))
+
+
+def _expert_mlp(p_experts: dict, xe: jax.Array, kind: str) -> jax.Array:
+    """xe: (E, ..., d) -> per-expert MLP via vmap over the E dim."""
+    return jax.vmap(lambda p, x: mlp(p, x, kind))(p_experts, xe)
+
+
+def _positions(top_e: jax.Array, e: int, c: int):
+    """Slot positions within each (group, expert) capacity buffer.
+
+    top_e: (B, S, k). Returns (pos (B,S,k), keep (B,S,k))."""
+    b, s, k = top_e.shape
+    flat = top_e.reshape(b, s * k)
+    onehot = jax.nn.one_hot(flat, e, dtype=jnp.int32)       # (B,S*k,E)
+    pos_all = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(
+        pos_all, flat[..., None], axis=-1)[..., 0]          # (B,S*k)
+    pos = pos.reshape(b, s, k)
+    return pos, pos < c
+
+
+def _dispatch_einsum(p: dict, x: jax.Array, top_w, top_e, mc: MoeConfig,
+                     kind: str, capacity: int | None) -> jax.Array:
+    b, s, d = x.shape
+    e, c = mc.n_experts, _capacity(s, mc, capacity)
+    pos, keep = _positions(top_e, e, c)
+    oh_e = jax.nn.one_hot(top_e, e, dtype=x.dtype)          # (B,S,k,E)
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, c), c + 1,
+                          dtype=x.dtype)[..., :c]           # (B,S,k,C)
+    disp = jnp.einsum("bske,bskc->bsec", oh_e, oh_c)        # (B,S,E,C)
+    comb = jnp.einsum("bske,bskc,bsk->bsec", oh_e, oh_c,
+                      top_w.astype(x.dtype))
+    xe = jnp.einsum("bsec,bsd->becd", disp, x)
+    xe = constrain(xe, ("batch", "experts", None, "d_model"))
+    ye = _moe_experts(p, xe, kind)
+    return jnp.einsum("bsec,becd->bsd", comb, ye)
+
+
+def _moe_experts(p: dict, xe: jax.Array, kind: str) -> jax.Array:
+    """xe: (B, E, C, d) -> (B, E, C, d) through per-expert MLPs."""
+    xe_t = xe.transpose(1, 0, 2, 3)                         # (E,B,C,d)
+    ye = _expert_mlp(p["experts"], xe_t, kind)
+    ye = ye.transpose(1, 0, 2, 3)
+    return constrain(ye, ("batch", "experts", None, "d_model"))
+
+
+def _dispatch_gather(p: dict, x: jax.Array, top_w, top_e, mc: MoeConfig,
+                     kind: str, capacity: int | None) -> jax.Array:
+    b, s, d = x.shape
+    e, c = mc.n_experts, _capacity(s, mc, capacity)
+    pos, keep = _positions(top_e, e, c)
+    k = mc.top_k
+    # Slot index within the group's (E*C) buffer; drops -> scratch slot.
+    slot = jnp.where(keep, top_e * c + pos, e * c)          # (B,S,k)
+    flat_slot = slot.reshape(b, s * k)
+    token_idx = jnp.broadcast_to(
+        jnp.arange(s, dtype=jnp.int32)[:, None], (s, k)).reshape(s * k)
+
+    def scatter_group(slots_g):
+        tok = jnp.zeros((e * c + 1,), jnp.int32).at[slots_g].set(
+            token_idx)
+        fil = jnp.zeros((e * c + 1,), bool).at[slots_g].set(
+            slots_g < e * c)
+        return tok[:e * c], fil[:e * c]
+
+    token_of_slot, filled = jax.vmap(scatter_group)(flat_slot)
+    xe = jnp.take_along_axis(x, token_of_slot[..., None], axis=1)
+    xe = jnp.where(filled[..., None], xe, 0.0)              # (B,E*C,d)
+    xe = constrain(xe.reshape(b, e, c, d),
+                   ("batch", "experts", None, "d_model"))
+    ye = _moe_experts(p, xe, kind).reshape(b, e * c, d)
+
+    def w_group(slots_g, w_g):
+        w = jnp.zeros((e * c + 1,), top_w.dtype).at[slots_g].set(w_g)
+        return w[:e * c]
+
+    w_of_slot = jax.vmap(w_group)(flat_slot,
+                                  top_w.reshape(b, s * k))
+    weighted = ye * w_of_slot[..., None].astype(ye.dtype)
+    weighted = jnp.where(filled[..., None], weighted, 0.0)
+
+    def gather_back(tok_g, w_slots_g):
+        return jnp.zeros((s, d), w_slots_g.dtype).at[tok_g].add(
+            w_slots_g)
+
+    return jax.vmap(gather_back)(token_of_slot, weighted)
+
+
+def moe_mlp(p: dict, x: jax.Array, cfg: ModelConfig,
+            capacity: int | None = None):
+    """x: (B, S, d) -> (y, aux_loss). Groups = batch dim.
+
+    ``capacity`` override: the decode path passes S (the per-group token
+    count) so serving is *dropless* (exact routing); training keeps the
+    capacity-bounded behavior standard for TPU MoE.
+    """
+    mc = cfg.moe
+    logits = x @ p["router"].astype(x.dtype)                # (B,S,E)
+    top_w, top_e, aux = _routing(logits, mc)
+    if mc.dispatch == "einsum":
+        y = _dispatch_einsum(p, x, top_w, top_e, mc, cfg.mlp, capacity)
+    else:
+        y = _dispatch_gather(p, x, top_w, top_e, mc, cfg.mlp, capacity)
+    y = y.astype(x.dtype)
+    if mc.n_shared:
+        y = y + mlp(p["shared"], x, cfg.mlp)
+    return y, aux

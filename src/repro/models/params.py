@@ -1,0 +1,75 @@
+"""Declarative parameter specs.
+
+Every module declares its parameters as a nested dict of :class:`Spec`
+(shape + logical axes + initializer). From one spec tree we derive:
+
+  * initialized parameters (``init``),
+  * the logical-axis tree (for sharding rules, ``axes``),
+  * abstract ShapeDtypeStructs for the dry-run (``abstract``).
+
+Layer stacks add a leading "layers" axis via :func:`stack_specs`; the
+dry-run never materializes parameters (ShapeDtypeStruct only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"      # normal | zeros | ones
+    scale: float | None = None  # None -> 1/sqrt(fan_in) for normal
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack_specs(tree, n: int, axis_name: str | None = "layers"):
+    """Prepend a stacking dimension of size ``n`` to every Spec."""
+    return jax.tree.map(
+        lambda s: Spec((n, *s.shape), (axis_name, *s.axes),
+                       s.init, s.scale),
+        tree, is_leaf=lambda x: isinstance(x, Spec))
+
+
+def _init_one(key: jax.Array, spec: Spec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = spec.scale if spec.scale is not None \
+        else 1.0 / np.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, spec.shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def init(specs, key: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, Spec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(k, s, dtype) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes(specs):
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, Spec))
+
+
+def abstract(specs, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+        is_leaf=lambda x: isinstance(x, Spec))
+
+
+def count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+        specs, is_leaf=lambda x: isinstance(x, Spec)))

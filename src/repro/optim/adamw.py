@@ -1,0 +1,108 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and
+warmup+cosine schedule — from scratch (no optax in the container)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def schedule(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup_steps)
+        frac = (step - warmup_steps) / max(1, total_steps - warmup_steps)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) *
+                         0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float | None = 1.0
+    # bf16 params + f32 master copies (kept in the optimizer state):
+    # halves every weight all-gather / TP collective while keeping
+    # full-precision accumulation. Use with ModelConfig.param_dtype =
+    # "bfloat16".
+    master_weights: bool = False
+
+    def init(self, params) -> dict:
+        zeros = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        state = {"mu": zeros(), "nu": zeros(),
+                 "count": jnp.zeros((), jnp.int32)}
+        if self.master_weights:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def _lr(self, count: jax.Array) -> jax.Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: dict, params):
+        """Returns (updates, new_state); apply with params + updates."""
+        count = state["count"] + 1
+        if self.grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip_norm /
+                                jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) *
+            jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        c = count.astype(jnp.float32)
+        bc1 = 1 - b1 ** c
+        bc2 = 1 - b2 ** c
+        lr = self._lr(count)
+
+        def upd(p, m, v):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return (-lr * step).astype(p.dtype)
+
+        anchor = state.get("master", params)
+        updates = jax.tree.map(upd, anchor, mu, nu)
+        new_state = {"mu": mu, "nu": nu, "count": count}
+        if self.master_weights:
+            new_state["master"] = jax.tree.map(
+                lambda m, u: m + u, state["master"], updates)
+        return updates, new_state
+
+    def step(self, grads, state: dict, params):
+        """(new_params, new_state) — handles master-weight casting."""
+        updates, new_state = self.update(grads, state, params)
+        if self.master_weights:
+            new_params = jax.tree.map(
+                lambda m, p: m.astype(p.dtype), new_state["master"],
+                params)
+        else:
+            new_params = apply_updates(params, updates)
+        return new_params, new_state
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                        params, updates)

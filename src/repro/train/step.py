@@ -1,0 +1,89 @@
+"""pjit train step: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation (compute/comm overlap lever) and logical-axis
+shardings for every (arch x mesh) cell."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.models.model import LM
+from repro.optim.adamw import AdamW, apply_updates
+
+
+def make_train_step(model: LM, opt: AdamW, microbatches: int = 1,
+                    rwkv_chunk: int | None = None):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, rwkv_chunk=rwkv_chunk)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / microbatches), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_body, (g0, 0.0), micro)
+            metrics = {"ce": loss, "z_loss": jnp.zeros(()),
+                       "aux": jnp.zeros(())}
+        params, opt_state = opt.step(grads, opt_state, params)
+        metrics = dict(metrics, loss=loss,
+                       step=opt_state["count"].astype(jnp.float32))
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_shardings(model: LM, mesh: Mesh,
+                    rules: Mapping[str, Any] | None = None):
+    """(params, opt_state, batch) shardings for jit in_shardings."""
+    axes = model.param_axes()
+    shapes = model.abstract_params()
+    p_shard = shd.tree_shardings(axes, mesh, rules, shapes)
+    opt_shard = {"mu": p_shard, "nu": p_shard,
+                 "count": NamedSharding(mesh, P())}
+    bspec = shd.batch_spec(mesh, extra_dims=1, rules=rules)
+    b_shard = {"tokens": NamedSharding(mesh, bspec),
+               "labels": NamedSharding(mesh, bspec)}
+    if model.cfg.frontend is not None:
+        b_shard["frontend"] = NamedSharding(
+            mesh, shd.batch_spec(mesh, extra_dims=2, rules=rules))
+    return p_shard, opt_shard, b_shard
+
+
+def jit_train_step(model: LM, opt: AdamW, mesh: Mesh,
+                   rules: Mapping[str, Any] | None = None,
+                   microbatches: int = 1,
+                   rwkv_chunk: int | None = None):
+    step = make_train_step(model, opt, microbatches=microbatches,
+                           rwkv_chunk=rwkv_chunk)
+    p_sh, o_sh, b_sh = train_shardings(model, mesh, rules)
+    return jax.jit(step,
+                   in_shardings=(p_sh, o_sh, b_sh),
+                   out_shardings=(p_sh, o_sh, None),
+                   donate_argnums=(0, 1)), (p_sh, o_sh, b_sh)

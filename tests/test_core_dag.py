@@ -1,0 +1,150 @@
+"""DAG model, sync insertion (Table III), enumeration, canonical form."""
+import pytest
+
+import repro.core as C
+from repro.core.dag import BoundOp, Graph, Op, OpKind
+
+
+def small_graph() -> Graph:
+    g = Graph()
+    g.add_op(Op("a", OpKind.CPU))
+    g.add_op(Op("k1", OpKind.GPU, flops=1e6))
+    g.add_op(Op("k2", OpKind.GPU, flops=1e6))
+    g.add_op(Op("b", OpKind.CPU))
+    g.add_edge("a", "k1")
+    g.add_edge("k1", "k2")
+    g.add_edge("k2", "b")
+    return g.finalize()
+
+
+def test_topological_order_contains_all():
+    g = C.spmv_dag()
+    order = g.topological_order()
+    assert set(order) == set(g.ops)
+    assert order[0] == Graph.START
+    assert order[-1] == Graph.END
+
+
+def test_cycle_detection():
+    g = Graph()
+    g.add_op(Op("x", OpKind.CPU))
+    g.add_op(Op("y", OpKind.CPU))
+    g.add_edge("x", "y")
+    g.add_edge("y", "x")
+    with pytest.raises(ValueError, match="cycle"):
+        g.finalize()
+
+
+def test_eligible_respects_deps():
+    g = C.spmv_dag()
+    assert g.eligible([]) == [Graph.START]
+    first = g.eligible([Graph.START])
+    assert "Pack" in first and "PostRecv" in first and "yL" in first
+    assert "PostSend" not in first  # needs Pack
+
+
+def test_validate_schedule_catches_violations():
+    g = small_graph()
+    good = C.Schedule((BoundOp("start"), BoundOp("a"), BoundOp("k1", 0),
+                       BoundOp("k2", 0), BoundOp("b"), BoundOp("end")))
+    C.validate_schedule(g, good)
+    bad = C.Schedule((BoundOp("start"), BoundOp("k1", 0), BoundOp("a"),
+                      BoundOp("k2", 0), BoundOp("b"), BoundOp("end")))
+    with pytest.raises(ValueError, match="before preds"):
+        C.validate_schedule(g, bad)
+    unbound = C.Schedule((BoundOp("start"), BoundOp("a"), BoundOp("k1"),
+                          BoundOp("k2", 0), BoundOp("b"), BoundOp("end")))
+    with pytest.raises(ValueError, match="no stream"):
+        C.validate_schedule(g, unbound)
+
+
+def test_canonicalize_streams():
+    items = (BoundOp("x", 3), BoundOp("c"), BoundOp("y", 1),
+             BoundOp("z", 3))
+    canon = C.canonicalize_streams(items)
+    assert [i.stream for i in canon] == [0, None, 1, 0]
+    assert C.canonicalize_streams(canon) == canon  # idempotent
+
+
+# -- Table III ---------------------------------------------------------------
+
+def test_sync_insertion_same_stream_no_sync():
+    g = small_graph()
+    s = C.Schedule((BoundOp("start"), BoundOp("a"), BoundOp("k1", 0),
+                    BoundOp("k2", 0), BoundOp("b"), BoundOp("end")))
+    names = C.expanded_names(g, s)
+    # k1->k2 same stream: no CSWE. k2->b GPU->CPU: CER+CES.
+    assert "CSWE-b4-k2" not in names
+    assert "CER-after-k2" in names and "CES-b4-b" in names
+    assert names.index("CER-after-k2") > names.index("k2")
+    assert names.index("CES-b4-b") < names.index("b")
+
+
+def test_sync_insertion_cross_stream():
+    g = small_graph()
+    s = C.Schedule((BoundOp("start"), BoundOp("a"), BoundOp("k1", 0),
+                    BoundOp("k2", 1), BoundOp("b"), BoundOp("end")))
+    names = C.expanded_names(g, s)
+    assert "CER-after-k1" in names
+    assert "CSWE-b4-k2" in names
+    assert names.index("CSWE-b4-k2") < names.index("k2")
+
+
+def test_sync_insertion_cpu_to_gpu_no_sync():
+    g = small_graph()
+    s = C.Schedule((BoundOp("start"), BoundOp("a"), BoundOp("k1", 0),
+                    BoundOp("k2", 0), BoundOp("b"), BoundOp("end")))
+    names = C.expanded_names(g, s)
+    assert "CES-b4-k1" not in names  # a->k1 is CPU->GPU: none
+
+
+# -- enumeration ---------------------------------------------------------------
+
+def test_enumeration_count_and_validity():
+    g = C.spmv_dag()
+    scheds = list(C.enumerate_schedules(g, 2))
+    # 3 GPU ops on <=2 streams: 4 canonical assignments per ordering.
+    orderings = {s.order() for s in scheds}
+    assert len(scheds) == 4 * len(orderings)
+    keys = {s.key() for s in scheds}
+    assert len(keys) == len(scheds)  # no duplicates
+    for s in scheds[:50]:
+        C.validate_schedule(g, s)
+
+
+def test_enumeration_one_stream():
+    g = C.spmv_dag()
+    one = list(C.enumerate_schedules(g, 1))
+    two = list(C.enumerate_schedules(g, 2))
+    orderings = {s.order() for s in two}
+    assert len(one) == len(orderings)  # single stream: 1 per ordering
+
+
+def test_canonical_pruning_no_bijection_duplicates():
+    g = C.spmv_dag()
+    seen = set()
+    for s in C.enumerate_schedules(g, 2):
+        # swap stream labels; the swapped variant must not also appear
+        swapped = tuple(
+            (i.name, 1 - i.stream if i.stream is not None else None)
+            for i in s.items)
+        assert swapped not in seen or swapped == s.key()
+        seen.add(s.key())
+
+
+def test_fine_grained_dag_valid_and_costed():
+    """Granularity ablation DAG: valid schedules, multi-channel cost
+    model, and the overhead conclusion (EXPERIMENTS §Paper)."""
+    from repro.core.dag import spmv_dag_fine
+    g = spmv_dag_fine()
+    assert {"Pack_l", "Pack_r", "PostSend_l", "WaitRecv_r",
+            "yL", "yR"} <= set(g.ops)
+    m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=0)
+    res = m.run(50)
+    for s in res.schedules:
+        C.validate_schedule(g, s)
+    assert all(t > 0 for t in res.times)
+    # fine granularity pays per-op overhead vs the coarse DAG's best
+    coarse_best = min(C.makespan(C.spmv_dag(), s)
+                      for s in C.enumerate_schedules(C.spmv_dag(), 2))
+    assert min(res.times) > coarse_best * 0.9

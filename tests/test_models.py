@@ -1,0 +1,201 @@
+"""Architecture zoo: per-arch smoke tests + serving/alternate-path
+equivalences (the brief's reduced-config smoke requirement)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.configs.shapes import SHAPES, applicable, cells
+from repro.models import attention as A
+from repro.models.model import LM
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=16):
+    out = {"tokens": jax.random.randint(KEY, (b, s), 0, cfg.vocab),
+           "labels": jax.random.randint(KEY, (b, s), 0, cfg.vocab)}
+    if cfg.frontend is not None:
+        out["frontend"] = jax.random.normal(
+            KEY, (b, cfg.frontend.n_positions, cfg.frontend.d_frontend),
+            jnp.float32)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one train step on the reduced config: shapes + no
+    NaNs (the assigned-architecture smoke test)."""
+    from repro.optim.adamw import AdamW
+    from repro.train.step import make_train_step
+
+    cfg = get_reduced(arch)
+    m = LM(cfg)
+    params = m.init(KEY)
+    batch = _batch(cfg)
+    logits, aux = m.forward(params, batch)
+    assert logits.shape == (2, 16, m.cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    opt = AdamW(learning_rate=1e-3)
+    step = jax.jit(make_train_step(m, opt))
+    p2, o2, metrics = step(params, opt.init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # params actually changed
+    moved = any(bool(jnp.any(a != b)) for a, b in
+                zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_reduced(arch)
+    m = LM(cfg)
+    params = m.init(KEY)
+    B, S = 2, 12
+    n_front = cfg.frontend.n_positions if cfg.family == "vlm" else 0
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tokens}
+    if cfg.frontend is not None:
+        batch["frontend"] = jax.random.normal(
+            KEY, (B, cfg.frontend.n_positions, cfg.frontend.d_frontend),
+            jnp.float32)
+    lf, _ = m.forward(params, batch)
+    npre = S - 3
+    pre = dict(batch, tokens=tokens[:, :npre])
+    lg, caches = m.prefill(params, pre, S + n_front + 8)
+    errs = [float(jnp.abs(lg[:, 0] - lf[:, npre - 1]).max())]
+    for i in range(3):
+        lg, caches = m.decode_step(
+            params, tokens[:, npre + i:npre + i + 1],
+            jnp.asarray(npre + i + n_front), caches)
+        errs.append(float(jnp.abs(lg[:, 0] - lf[:, npre + i]).max()))
+    assert max(errs) == 0.0
+
+
+def test_full_configs_match_brief():
+    """The exact architecture hyperparameters from the assignment."""
+    expect = {
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 1408, 163840),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+                c.d_ff, c.vocab) == (L, d, h, kv, ff, v), arch
+    assert get_config("deepseek-moe-16b").moe.n_experts == 64
+    assert get_config("deepseek-moe-16b").moe.top_k == 6
+    assert get_config("deepseek-moe-16b").moe.n_shared == 2
+    assert get_config("jamba-v0.1-52b").moe.n_experts == 16
+    assert get_config("jamba-v0.1-52b").moe.top_k == 2
+    assert get_config("jamba-v0.1-52b").pattern.count("attn") == 1
+    assert len(get_config("jamba-v0.1-52b").pattern) == 8
+    assert get_config("qwen2.5-32b").qkv_bias
+    assert get_config("nemotron-4-15b").mlp == "relu2"
+
+
+def test_shape_cells_and_skips():
+    """40 assigned cells; long_500k only for sub-quadratic archs."""
+    assert len(ARCHS) * len(SHAPES) == 40
+    runnable = cells(ARCHS)
+    assert len(runnable) == 32  # 8 pure-attention archs skip long_500k
+    assert not applicable("qwen2.5-32b", "long_500k")
+    assert applicable("rwkv6-3b", "long_500k")
+    assert applicable("jamba-v0.1-52b", "long_500k")
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+def test_head_padding_layout_exact():
+    """Padded/duplicated GQA layout == plain layout, weights mapped via
+    slot_to_real."""
+    cfg0 = dataclasses.replace(get_reduced("qwen2.5-32b"),
+                               dtype="float32")  # 5 q heads, 1 kv head
+    m0 = LM(cfg0)
+    p0 = m0.init(KEY)
+    cfg1 = dataclasses.replace(cfg0, head_pad_to=2)
+    assert cfg1.head_layout() == (2, 3, 6)
+    m1 = LM(cfg1)
+    p1 = m1.init(jax.random.PRNGKey(1))
+    s2r = A.slot_to_real(cfg1)
+
+    import jax.tree_util as jtu
+    flat0 = {jtu.keystr(k): v
+             for k, v in jtu.tree_flatten_with_path(p0)[0]}
+    flat1 = jtu.tree_flatten_with_path(p1)[0]
+    leaves = []
+    for k, v in flat1:
+        ks = jtu.keystr(k)
+        src = flat0[ks]
+        if v.shape == src.shape:
+            leaves.append(src)
+            continue
+        new = jnp.zeros_like(v)
+        for slot, real in enumerate(s2r):
+            if real is None:
+                continue
+            if ks.endswith("['wq']") or ks.endswith("['bq']"):
+                new = new.at[:, ..., slot, :].set(src[:, ..., real, :])
+            else:  # wo
+                new = new.at[:, slot].set(src[:, real])
+        leaves.append(new)
+    p1 = jtu.tree_unflatten(jtu.tree_flatten_with_path(p1)[1], leaves)
+    batch = {"tokens": jax.random.randint(KEY, (2, 12), 0, cfg0.vocab)}
+    l0, _ = m0.forward(p0, batch)
+    l1, _ = m1.forward(p1, batch)
+    assert float(jnp.abs(l0 - l1).max()) == 0.0
+
+
+def test_rwkv_chunked_equals_sequential():
+    cfg = dataclasses.replace(get_reduced("rwkv6-3b"), dtype="float32")
+    m = LM(cfg)
+    params = m.init(KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 32), 0, cfg.vocab)}
+    l_seq, _ = m.forward(params, batch)
+    l_chk, _ = m.forward(params, batch, rwkv_chunk=8)
+    np.testing.assert_allclose(np.asarray(l_seq), np.asarray(l_chk),
+                               atol=2e-5)
+
+
+def test_moe_gather_equals_einsum_dispatch():
+    cfg = dataclasses.replace(get_reduced("deepseek-moe-16b"),
+                              dtype="float32")
+    m1 = LM(cfg)
+    params = m1.init(KEY)
+    cfg2 = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, dispatch="gather"))
+    m2 = LM(cfg2)
+    batch = {"tokens": jax.random.randint(KEY, (2, 32), 0, cfg.vocab)}
+    l1, _ = m1.forward(params, batch)
+    l2, _ = m2.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               atol=2e-5)
+
+
+def test_windowed_attention_masks_past():
+    """With window w, logits must not depend on tokens further back."""
+    cfg = dataclasses.replace(get_reduced("granite-3-8b"),
+                              dtype="float32", attn_window=4)
+    m = LM(cfg)
+    params = m.init(KEY)
+    t1 = jax.random.randint(KEY, (1, 16), 0, cfg.vocab)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 1) % cfg.vocab)
+    l1, _ = m.forward(params, {"tokens": t1})
+    l2, _ = m.forward(params, {"tokens": t2})
+    # position 15 attends only to 12..15 -> unaffected by token 0
+    np.testing.assert_allclose(np.asarray(l1[0, -1]),
+                               np.asarray(l2[0, -1]), atol=1e-6)
+    assert float(jnp.abs(l1[0, 0] - l2[0, 0]).max()) > 0  # sanity
