@@ -1,6 +1,8 @@
 """Benchmarks reproducing each paper table/figure on our SpMV space.
 
-Each function returns (rows, derived) where rows are CSV lines
+Every search below — exhaustive, MCTS, noisy MCTS — runs through the
+unified ``repro.search.run_search`` pipeline (one code path with the
+examples and the smoke test). Each function returns rows as CSV lines
 ``name,us_per_call,derived``.
 """
 from __future__ import annotations
@@ -10,13 +12,23 @@ import time
 import numpy as np
 
 import repro.core as C
+import repro.search as S
 
 
 def _space(n_streams: int = 2):
+    """Exhaustive SpMV design space via the unified search pipeline."""
     g = C.spmv_dag()
-    scheds = list(C.enumerate_schedules(g, n_streams))
-    times = np.array([C.makespan(g, s) for s in scheds])
-    return g, scheds, times
+    res = S.run_search(g, S.ExhaustiveSearch(g, n_streams), budget=None,
+                       batch_size=64)
+    return g, res.schedules, res.times_array()
+
+
+def _mcts(g, iters: int, seed: int, noise_sigma: float = 0.0):
+    """MCTS through the same pipeline (batch_size=1: the paper's loop)."""
+    evaluator = S.BatchEvaluator(g, noise_sigma=noise_sigma,
+                                 noise_seed=7)
+    return S.run_search(g, S.MCTSSearch(g, 2, seed=seed), budget=iters,
+                        evaluator=evaluator)
 
 
 def fig1_spread() -> list[str]:
@@ -74,10 +86,8 @@ def table5_accuracy() -> list[str]:
     rows = []
     for iters in (25, 50, 100, 200, 1200):
         t0 = time.perf_counter()
-        m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=1)
-        res = m.run(iters)
-        lab = C.label_times(np.array(res.times))
-        fm = C.featurize(g, res.schedules)
+        res = _mcts(g, iters, seed=1)
+        fm, lab, _ = res.dataset()
         tree = C.algorithm1(fm.X, lab.labels)
         Xf = C.featurize_like(g, scheds, fm)
         acc = C.class_range_accuracy(tree, Xf, times,
@@ -98,10 +108,8 @@ def tables678_rules() -> list[str]:
     rows = []
     for iters in (50, 100, 200):
         t0 = time.perf_counter()
-        m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=2)
-        res = m.run(iters)
-        lab_i = C.label_times(np.array(res.times))
-        fm_i = C.featurize(g, res.schedules)
+        res = _mcts(g, iters, seed=2)
+        fm_i, lab_i, _ = res.dataset()
         tree_i = C.algorithm1(fm_i.X, lab_i.labels)
         rs = C.extract_rulesets(tree_i, fm_i.features)
         C.annotate_vs_canonical(rs, canon)
@@ -130,8 +138,7 @@ def stepdag_overlap() -> list[str]:
                       bwd_bytes=2e9, grad_bytes=2e9)
     g = with_comm_durations(train_step_dag(4, costs), 50e9)
     t0 = time.perf_counter()
-    m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=0)
-    res = m.run(400)
+    res = S.run_search(g, S.MCTSSearch(g, 2, seed=0), budget=400)
     wall = (time.perf_counter() - t0) / 400 * 1e6
     best = min(res.times)
     worst = max(res.times)
@@ -152,13 +159,11 @@ def granularity_ablation() -> list[str]:
     from repro.core.dag import spmv_dag_fine
     g_fine = spmv_dag_fine()
     t0 = time.perf_counter()
-    m = C.MCTS(g_fine, 2, lambda s: C.makespan(g_fine, s), seed=0)
-    res = m.run(2000)
+    res = S.run_search(g_fine, S.MCTSSearch(g_fine, 2, seed=0),
+                       budget=2000)
     wall = (time.perf_counter() - t0) / 2000 * 1e6
-    tf = np.array(res.times)
-    g_coarse = C.spmv_dag()
-    tc = np.array([C.makespan(g_coarse, s)
-                   for s in C.enumerate_schedules(g_coarse, 2)])
+    tf = res.times_array()
+    g_coarse, _, tc = _space()
     return [
         f"granularity_fine_best_us,{wall:.2f},{tf.min() * 1e6:.2f}",
         f"granularity_coarse_best_us,{wall:.2f},{tc.min() * 1e6:.2f}",
@@ -173,17 +178,12 @@ def noise_robustness() -> list[str]:
     paper's empirical times are noisy; our machine model lets us dose
     noise explicitly). Reports Table-V-style accuracy at 200 MCTS
     iterations under multiplicative Gaussian noise."""
-    from repro.core.bench import NoisyObjective
     g, scheds, times = _space()
     rows = []
     for sigma in (0.0, 0.01, 0.05):
         t0 = time.perf_counter()
-        obj = NoisyObjective(lambda s: C.makespan(g, s),
-                             rel_sigma=sigma, seed=7)
-        m = C.MCTS(g, 2, obj, seed=3)
-        res = m.run(200)
-        lab = C.label_times(np.array(res.times))
-        fm = C.featurize(g, res.schedules)
+        res = _mcts(g, 200, seed=3, noise_sigma=sigma)
+        fm, lab, _ = res.dataset()
         tree = C.algorithm1(fm.X, lab.labels)
         Xf = C.featurize_like(g, scheds, fm)
         # widen class ranges by the noise level for the range test

@@ -2,7 +2,8 @@
 and substrate microbenches. Prints ``name,us_per_call,derived`` CSV."""
 from __future__ import annotations
 
-from benchmarks.kernels_bench import kernel_benches, model_benches
+from benchmarks.kernels_bench import (kernel_benches, model_benches,
+                                      search_eval_benches)
 from benchmarks.paper import (fig1_spread, fig4_labels, fig5_tree,
                               granularity_ablation, noise_robustness,
                               stepdag_overlap, table5_accuracy,
@@ -13,7 +14,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for fn in (fig1_spread, fig4_labels, fig5_tree, table5_accuracy,
                tables678_rules, stepdag_overlap, granularity_ablation,
-               noise_robustness, kernel_benches, model_benches):
+               noise_robustness, search_eval_benches, kernel_benches,
+               model_benches):
         for row in fn():
             print(row, flush=True)
 

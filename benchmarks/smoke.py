@@ -1,0 +1,50 @@
+"""30-second end-to-end smoke pass: search -> labels -> tree -> rules.
+
+Runs the full paper pipeline through the unified search subsystem on
+the SpMV DAG with a small MCTS budget. Used two ways:
+
+  * ``PYTHONPATH=src python benchmarks/smoke.py`` prints the summary;
+  * ``pytest -m smoke`` runs it as a marked test
+    (tests/test_smoke.py), so CI can gate on the hot path cheaply.
+"""
+from __future__ import annotations
+
+import time
+
+import repro.core as C
+import repro.search as S
+
+
+def run_smoke(budget: int = 200, seed: int = 0) -> dict:
+    """One end-to-end search->rules pass; returns a summary dict."""
+    t0 = time.perf_counter()
+    g = C.spmv_dag()
+    res = S.run_search(g, S.MCTSSearch(g, 2, seed=seed), budget=budget)
+    fm, lab, times = res.dataset()
+    tree = C.algorithm1(fm.X, lab.labels)
+    rulesets = C.extract_rulesets(tree, fm.features)
+    best, best_t = res.best()
+    return {
+        "n_evaluations": res.n_proposed,
+        "n_schedules": len(res.schedules),
+        "cache_hits": res.cache_hits,
+        "best_us": best_t * 1e6,
+        "spread": float(times.max() / times.min()),
+        "n_classes": lab.n_classes,
+        "n_features": len(fm.features),
+        "n_rulesets": len(rulesets),
+        "training_error": tree.training_error(fm.X, lab.labels),
+        "best_order": " ".join(str(i) for i in best.items
+                               if i.name not in ("start", "end")),
+        "wall_s": time.perf_counter() - t0,
+    }
+
+
+def main() -> None:
+    out = run_smoke()
+    for k, v in out.items():
+        print(f"smoke_{k}: {v}")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,9 +13,8 @@ Usage: PYTHONPATH=src python examples/schedule_search.py
 """
 import argparse
 
-import numpy as np
-
 import repro.core as C
+import repro.search as S
 from repro.configs import get_config
 from repro.core.stepdag import StepCosts, train_step_dag, \
     with_comm_durations
@@ -52,20 +51,20 @@ def main() -> None:
     print(f"train-step DAG for {args.arch}: {graph.n_vertices()} ops, "
           f"{args.layers} stages")
 
-    mcts = C.MCTS(graph, args.channels,
-                  lambda s: C.makespan(graph, s), seed=0)
-    res = mcts.run(args.iters)
-    times = np.array(res.times)
-    best = res.schedules[int(np.argmin(times))]
-    print(f"explored {len(res.schedules)} schedules; best "
-          f"{times.min() * 1e3:.2f} ms, worst {times.max() * 1e3:.2f} ms "
+    res = S.run_search(graph, S.MCTSSearch(graph, args.channels, seed=0),
+                       budget=args.iters)
+    times = res.times_array()
+    best, best_t = res.best()
+    print(f"explored {len(res.schedules)} schedules "
+          f"({res.n_proposed} evaluations, {res.cache_hits} memo hits); "
+          f"best {times.min() * 1e3:.2f} ms, "
+          f"worst {times.max() * 1e3:.2f} ms "
           f"({times.max() / times.min():.2f}x)")
     print("best emission order:",
           " ".join(str(i) for i in best.items
                    if i.name not in ("start", "end")))
 
-    labels = C.label_times(times)
-    fm = C.featurize(graph, res.schedules)
+    fm, labels, _ = res.dataset()
     tree = C.algorithm1(fm.X, labels.labels)
     rulesets = C.extract_rulesets(tree, fm.features)
     print(f"\n{labels.n_classes} performance classes; design rules:")

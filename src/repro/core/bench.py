@@ -29,22 +29,7 @@ def measure(fn: Callable[[], object], t_measure_s: float = T_MEASURE_S,
     return elapsed / n
 
 
-class NoisyObjective:
-    """Wrap a deterministic objective with reproducible measurement noise.
-
-    MCTS on real hardware sees noisy times; benches that want to stress
-    the labeling robustness use this (multiplicative Gaussian, seeded).
-    """
-
-    def __init__(self, objective: Callable, rel_sigma: float = 0.0,
-                 seed: int = 0):
-        import random
-        self._obj = objective
-        self._sigma = rel_sigma
-        self._rng = random.Random(seed)
-
-    def __call__(self, schedule) -> float:
-        t = self._obj(schedule)
-        if self._sigma:
-            t *= max(0.1, 1.0 + self._rng.gauss(0.0, self._sigma))
-        return t
+# Measurement-noise injection for labeling-robustness studies lives in
+# repro.search.evaluator.BatchEvaluator (noise_sigma=...): noise is
+# drawn per evaluation, after the memo cache, matching how re-running a
+# real benchmark behaves.

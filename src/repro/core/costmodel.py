@@ -53,9 +53,36 @@ class SimResult:
     op_end: dict[str, float]
 
 
+def op_durations(graph: Graph, machine: Machine | None = None
+                 ) -> dict[str, float]:
+    """Duration of every DAG op under ``machine``.
+
+    Schedule-independent, so batched evaluation
+    (:class:`repro.search.evaluator.BatchEvaluator`) computes this once
+    and passes it to :func:`simulate` for every schedule in the batch.
+    The expressions mirror the per-op fallback inside :func:`simulate`
+    exactly, keeping batched results bit-identical to unbatched ones.
+    """
+    m = machine or Machine()
+    out: dict[str, float] = {}
+    for name, op in graph.ops.items():
+        if op.duration is not None:
+            out[name] = op.duration
+        elif op.kind is OpKind.GPU:
+            out[name] = m.gpu_duration(op.flops, op.bytes_hbm)
+        else:
+            out[name] = m.cpu_op_s
+    return out
+
+
 def simulate(graph: Graph, schedule: Schedule,
-             machine: Machine | None = None) -> SimResult:
-    """Simulate the expanded schedule; return its makespan (seconds)."""
+             machine: Machine | None = None,
+             durations: dict[str, float] | None = None) -> SimResult:
+    """Simulate the expanded schedule; return its makespan (seconds).
+
+    ``durations`` optionally supplies precomputed per-op durations (from
+    :func:`op_durations`) so batch callers skip the per-op roofline math.
+    """
     m = machine or Machine()
     items: list[ExpandedItem] = expand(graph, schedule)
 
@@ -121,15 +148,17 @@ def simulate(graph: Graph, schedule: Schedule,
             s = it.stream
             start = max(cpu_t, stream_t.get(s, 0.0),
                         stream_wait.pop(s, 0.0))
-            dur = op.duration if op.duration is not None else \
-                m.gpu_duration(op.flops, op.bytes_hbm)
+            dur = durations[it.name] if durations is not None else (
+                op.duration if op.duration is not None else
+                m.gpu_duration(op.flops, op.bytes_hbm))
             op_start[it.name] = start
             op_end[it.name] = start + dur
             stream_t[s] = start + dur
             continue
 
         # Synchronous CPU op.
-        dur = op.duration if op.duration is not None else m.cpu_op_s
+        dur = durations[it.name] if durations is not None else (
+            op.duration if op.duration is not None else m.cpu_op_s)
         op_start[it.name] = cpu_t
         if op.comm_role is CommRole.POST_SEND:
             cpu_t += dur

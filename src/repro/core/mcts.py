@@ -1,77 +1,26 @@
-"""Monte-Carlo tree search over the implementation space (paper §III-C).
+"""Legacy objective-driven MCTS driver (paper §III-C).
 
-Tree nodes are schedule prefixes P_k. The four phases:
+The tree search itself now lives in :mod:`repro.search.mcts` as a
+:class:`~repro.search.strategy.SearchStrategy`; this module keeps the
+original ``MCTS(graph, n_streams, objective, seed).run(iterations)``
+interface as a thin wrapper (propose one schedule, call the objective,
+observe) so existing callers and tests are untouched. New code should
+prefer ``repro.search.run_search`` with ``MCTSSearch``, which adds
+batched + memoized evaluation.
 
-  selection      recursively maximize (exploration + exploitation):
-                   exploration  = c * sqrt(ln N / n),  c = sqrt(2)
-                                  (-inf once the child subtree is fully
-                                   explored)
-                   exploitation = (t_max^c - t_min^c) / (t_max^p - t_min^p)
-                                  when both child and parent have >= 2
-                                  rollouts, else 1
-                 i.e. favor children whose subtree *covers* more of the
-                 parent's observed time range — regions where decisions
-                 matter — not children that are merely fast. Recursion
-                 stops at any node with a zero-rollout child.
-  expansion      materialize one zero-rollout child of the selected node
-                 (children are the DAG-eligible next ops; GPU ops are bound
-                 to a stream, with stream-bijection duplicates pruned via
-                 canonical first-use labeling).
-  rollout        complete the prefix uniformly at random, benchmark the
-                 resulting program, and add the rollout path to the tree.
-  backprop       update t_min/t_max on every node along the path.
+The wrapper is sequence-identical to the pre-refactor implementation:
+one selection/expansion/rollout per iteration, objective call, then
+backpropagation, with the same RNG consumption order.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
-import random
 from typing import Callable
 
-from repro.core.dag import BoundOp, Graph, OpKind, Schedule
+from repro.core.dag import Graph, Schedule
+from repro.search.mcts import EXPLORATION_C, MCTSSearch, Node
 
-EXPLORATION_C = math.sqrt(2.0)
-
-
-class Node:
-    __slots__ = ("item", "parent", "children", "n_rollouts",
-                 "t_min", "t_max", "fully_explored", "_expandable")
-
-    def __init__(self, item: BoundOp | None, parent: "Node | None"):
-        self.item = item
-        self.parent = parent
-        self.children: dict[tuple, Node] = {}
-        self.n_rollouts = 0
-        self.t_min = math.inf
-        self.t_max = -math.inf
-        self.fully_explored = False
-        self._expandable: list[BoundOp] | None = None  # lazily computed
-
-    def prefix(self) -> list[BoundOp]:
-        out: list[BoundOp] = []
-        node = self
-        while node.parent is not None:
-            out.append(node.item)
-            node = node.parent
-        out.reverse()
-        return out
-
-
-def _child_options(graph: Graph, prefix: list[BoundOp],
-                   n_streams: int) -> list[BoundOp]:
-    """Eligible next items from a prefix, stream-bijection pruned."""
-    scheduled = {b.name for b in prefix}
-    used = sorted({b.stream for b in prefix if b.stream is not None})
-    options: list[BoundOp] = []
-    for name in graph.eligible(scheduled):
-        if graph.ops[name].kind is OpKind.GPU:
-            for s in used:
-                options.append(BoundOp(name, s))
-            if len(used) < n_streams:
-                options.append(BoundOp(name, len(used)))
-        else:
-            options.append(BoundOp(name))
-    return options
+__all__ = ["EXPLORATION_C", "MCTS", "MCTSResult", "Node"]
 
 
 @dataclasses.dataclass
@@ -90,113 +39,30 @@ class MCTS:
         self.graph = graph
         self.n_streams = n_streams
         self.objective = objective
-        self.rng = random.Random(seed)
-        self.root = Node(None, None)
+        self._search = MCTSSearch(graph, n_streams, seed=seed)
         self.schedules: list[Schedule] = []
         self.times: list[float] = []
         self._seen: set[tuple] = set()
 
-    # -- phase 1: selection ------------------------------------------------
-    def _value(self, parent: Node, child: Node) -> float:
-        if child.fully_explored:
-            explore = -math.inf
-        elif child.n_rollouts == 0:
-            explore = math.inf
-        else:
-            explore = EXPLORATION_C * math.sqrt(
-                math.log(parent.n_rollouts) / child.n_rollouts)
-        if child.n_rollouts >= 2 and parent.n_rollouts >= 2 and \
-                parent.t_max > parent.t_min:
-            exploit = (child.t_max - child.t_min) / \
-                (parent.t_max - parent.t_min)
-        else:
-            exploit = 1.0
-        return explore + exploit
+    @property
+    def root(self) -> Node:
+        return self._search.root
 
-    def _select(self) -> Node:
-        node = self.root
-        while True:
-            opts = self._expandable(node)
-            # Terminate at any node that still has an unmaterialized or
-            # zero-rollout child.
-            if any(key not in node.children or
-                   node.children[key].n_rollouts == 0
-                   for key in ((o.name, o.stream) for o in opts)):
-                return node
-            if not node.children:
-                return node  # complete leaf (shouldn't be selected; guard)
-            node = max(node.children.values(),
-                       key=lambda ch: self._value(node, ch))
+    @property
+    def rng(self):
+        return self._search.rng
 
-    def _expandable(self, node: Node) -> list[BoundOp]:
-        if node._expandable is None:
-            node._expandable = _child_options(
-                self.graph, node.prefix(), self.n_streams)
-        return node._expandable
-
-    # -- phase 2: expansion --------------------------------------------------
-    def _expand(self, node: Node) -> Node:
-        opts = self._expandable(node)
-        fresh = [o for o in opts
-                 if (o.name, o.stream) not in node.children or
-                 node.children[(o.name, o.stream)].n_rollouts == 0]
-        if not fresh:  # fully rolled-out interior node: descend randomly
-            return node
-        choice = self.rng.choice(fresh)
-        key = (choice.name, choice.stream)
-        if key not in node.children:
-            node.children[key] = Node(choice, node)
-        return node.children[key]
-
-    # -- phase 3: rollout ----------------------------------------------------
-    def _rollout(self, node: Node) -> tuple[Node, Schedule]:
-        """Complete the prefix randomly, materializing path nodes."""
-        cur = node
-        while True:
-            opts = self._expandable(cur)
-            if not opts:
-                break
-            choice = self.rng.choice(opts)
-            key = (choice.name, choice.stream)
-            if key not in cur.children:
-                cur.children[key] = Node(choice, cur)
-            cur = cur.children[key]
-        return cur, Schedule(tuple(cur.prefix()))
-
-    # -- phase 4: backpropagation ---------------------------------------------
-    def _backprop(self, leaf: Node, t: float) -> None:
-        node: Node | None = leaf
-        while node is not None:
-            node.n_rollouts += 1
-            node.t_min = min(node.t_min, t)
-            node.t_max = max(node.t_max, t)
-            node = node.parent
-        # Mark fully-explored subtrees bottom-up.
-        node = leaf
-        node.fully_explored = True  # complete program leaf
-        node = node.parent
-        while node is not None:
-            opts = self._expandable(node)
-            node.fully_explored = (
-                len(node.children) == len(opts) and
-                all(c.fully_explored for c in node.children.values()))
-            if not node.fully_explored:
-                break
-            node = node.parent
-
-    # -- driver ----------------------------------------------------------------
     def run(self, iterations: int) -> MCTSResult:
         for _ in range(iterations):
-            if self.root.fully_explored:
+            batch = self._search.propose(1)
+            if not batch:
                 break
-            node = self._select()
-            node = self._expand(node)
-            leaf, schedule = self._rollout(node)
+            schedule = batch[0]
             t = self.objective(schedule)
             key = schedule.key()
             if key not in self._seen:
                 self._seen.add(key)
                 self.schedules.append(schedule)
                 self.times.append(t)
-            self._backprop(leaf, t)
-        return MCTSResult(self.schedules, self.times, self.root)
+            self._search.observe(schedule, t)
+        return MCTSResult(self.schedules, self.times, self._search.root)

@@ -1,0 +1,2 @@
+"""Distribution utilities: logical-axis sharding rules and compressed
+data-parallel gradient synchronization."""

@@ -1,0 +1,24 @@
+"""JAX version compatibility shims.
+
+``jax.shard_map`` (with the ``check_vma`` flag) is the modern spelling;
+older jax (< 0.5) ships it as ``jax.experimental.shard_map.shard_map``
+with the flag named ``check_rep``. All repo code routes through
+:func:`shard_map` so either runtime works.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _legacy
+
+    def shard_map(f=None, /, **kwargs):
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        if f is None:
+            return lambda g: _legacy(g, **kwargs)
+        return _legacy(f, **kwargs)

@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules engine (see DESIGN.md §5).
+
+Arrays are described by *logical* axis names ("batch", "d_ff", ...);
+a rules dict maps logical names to mesh axes. :func:`spec_for` resolves
+names to a :class:`jax.sharding.PartitionSpec` with three safeguards:
+
+  * every mesh axis is used by at most one array dimension (first dim
+    in order wins; later dims wanting a taken axis replicate),
+  * a dimension only shards if its size divides the product of its mesh
+    axes (non-divisible dims silently replicate — e.g. a global batch
+    of 1, or 15 heads on a 16-way model axis),
+  * rule entries naming mesh axes absent from the current mesh are
+    silently dropped (so one rules dict serves single-pod and
+    multi-pod meshes).
+
+Baseline scheme: TP over "model" (heads / d_ff / vocab / experts),
+batch over ("pod", "data"); per-cell overrides (FSDP, KV fallbacks)
+come from ``repro.launch.inputs.rules_for``.
+
+:func:`constrain` is the model-internal activation hook: a no-op unless
+a :func:`activation_sharding` context is active (models stay mesh-
+agnostic; the launch layer binds the context per cell).
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Iterable, Mapping, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "kv_seq": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "heads_x_dim": "model",
+    "d_ff": "model",
+    "d_inner": "model",
+    "vocab": "model",
+    "experts": "model",
+    "kv_stored": "model",
+}
+
+
+def _as_axes(value: Any) -> tuple[str, ...]:
+    if value is None:
+        return ()
+    if isinstance(value, str):
+        return (value,)
+    return tuple(value)
+
+
+def _merged_rules(rules: Mapping[str, Any] | None) -> dict[str, tuple]:
+    out = {k: _as_axes(v) for k, v in DEFAULT_RULES.items()}
+    if rules:
+        out.update({k: _as_axes(v) for k, v in rules.items()})
+    return out
+
+
+def spec_for(shape: Sequence[int], names: Sequence[str | None],
+             mesh, rules: Mapping[str, Any] | None = None) -> P:
+    """PartitionSpec for an array of ``shape`` with logical ``names``.
+
+    ``mesh`` only needs ``axis_names`` and ``devices.shape`` (tests use
+    a lightweight stand-in; real code passes :class:`jax.sharding.Mesh`).
+    """
+    merged = _merged_rules(rules)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    taken: set[str] = set()
+    entries: list[Any] = []
+    for dim, name in zip(shape, names):
+        axes = [a for a in merged.get(name, ())
+                if a in sizes and a not in taken] if name else []
+        total = math.prod(sizes[a] for a in axes) if axes else 1
+        if axes and dim % total == 0:
+            taken.update(axes)
+            entries.append(tuple(axes) if len(axes) > 1 else axes[0])
+        else:
+            entries.append(None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(axes_tree, mesh, rules: Mapping[str, Any] | None,
+                   shapes_tree):
+    """NamedSharding pytree for ``shapes_tree``.
+
+    ``axes_tree`` mirrors ``shapes_tree`` with tuples of logical names
+    (or None for fully replicated leaves) in place of arrays.
+    """
+    is_names = lambda x: x is None or (  # noqa: E731
+        isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                     for a in x))
+    ax_leaves = jax.tree.flatten(axes_tree, is_leaf=is_names)[0]
+    sh_leaves, sh_def = jax.tree.flatten(shapes_tree)
+    if len(ax_leaves) != len(sh_leaves):
+        raise ValueError(
+            f"axes tree has {len(ax_leaves)} leaves, shapes tree "
+            f"{len(sh_leaves)}")
+    out = []
+    for names, leaf in zip(ax_leaves, sh_leaves):
+        if names is None:
+            names = (None,) * len(leaf.shape)
+        out.append(NamedSharding(
+            mesh, spec_for(leaf.shape, names, mesh, rules)))
+    return jax.tree.unflatten(sh_def, out)
+
+
+def batch_spec(mesh, extra_dims: int = 1,
+               rules: Mapping[str, Any] | None = None,
+               batch_size: int | None = None) -> P:
+    """Spec for a (batch, ...) array: dim 0 on the batch axes, the
+    ``extra_dims`` trailing dims replicated.
+
+    When ``batch_size`` is known, a non-divisible batch replicates
+    (the spec_for safeguard); when unknown, the caller owns ensuring
+    the batch divides the mesh's batch axes.
+    """
+    merged = _merged_rules(rules)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = [a for a in merged.get("batch", ()) if a in sizes]
+    if batch_size is not None and axes and \
+            batch_size % math.prod(sizes[a] for a in axes) != 0:
+        axes = []
+    if not axes:
+        return P()
+    entry = tuple(axes) if len(axes) > 1 else axes[0]
+    return P(entry, *(None,) * extra_dims)
+
+
+# -- activation-sharding context --------------------------------------------
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, rules: Mapping[str, Any] | None):
+    """Bind (mesh, rules) so model-internal :func:`constrain` calls
+    resolve; contexts nest (innermost wins)."""
+    stack = getattr(_ctx, "stack", None)
+    if stack is None:
+        stack = _ctx.stack = []
+    stack.append((mesh, rules))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def constrain(x, names: Iterable[str | None]):
+    """Apply a logical sharding constraint to activation ``x``.
+
+    No-op (returns ``x`` unchanged) outside an
+    :func:`activation_sharding` context, so models run un-jitted and
+    un-meshed in unit tests.
+    """
+    stack = getattr(_ctx, "stack", None)
+    if not stack:
+        return x
+    mesh, rules = stack[-1]
+    spec = spec_for(x.shape, tuple(names), mesh, rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

@@ -217,12 +217,15 @@ def _dot_flops(ins: Instruction,
     out_elems = 1
     for d in (out_dims[0] if out_dims else []):
         out_elems *= d
-    # lhs operand shape:
-    om = re.search(r"\(\s*%([\w.\-]+)", ins.text)
+    # lhs operand shape. Operands may carry inline types
+    # ("dot(f32[64,64]{1,0} %lhs, ...)" in newer XLA dumps) or not
+    # ("dot(%lhs, %rhs)"); the first %-reference in the RHS is the lhs
+    # either way.
+    ops = re.findall(r"%([\w.\-]+)", ins.text)
     contract = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.text)
-    if not om or not contract:
+    if not ops or not contract:
         return 0.0
-    lhs = comp.instructions.get(om.group(1))
+    lhs = comp.instructions.get(ops[0])
     if lhs is None:
         return 0.0
     lhs_dims_list = _shape_dims(lhs.type_str)
@@ -275,8 +278,10 @@ def analyze(hlo_text: str) -> HloAnalysis:
                     ins.opcode == "fusion" and "convert" in ins.name):
                 nbytes = _shape_bytes(ins.type_str)
                 if nbytes >= 64e6:
-                    om = re.search(r"\(\s*%([\w.\-]+)", ins.text)
-                    src = comp.instructions.get(om.group(1)) if om \
+                    # First %-ref in the RHS is the operand, with or
+                    # without inline operand types (see _dot_flops).
+                    ops = re.findall(r"%([\w.\-]+)", ins.text)
+                    src = comp.instructions.get(ops[0]) if ops \
                         else None
                     if src is None or src.type_str.startswith("bf16") \
                             or src.opcode == "parameter":

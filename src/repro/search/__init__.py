@@ -1,0 +1,22 @@
+"""Unified design-space search subsystem.
+
+One strategy protocol (:class:`SearchStrategy`), four strategies
+(exhaustive, MCTS, random, greedy-cost-model), a batched + memoized
+evaluator, and the :func:`run_search` pipeline that turns any of them
+into the (features, labels, times) dataset the rules pipeline consumes.
+See README.md in this package for the contract.
+"""
+from repro.search.evaluator import BatchEvaluator, canonical_key
+from repro.search.mcts import MCTSSearch
+from repro.search.pipeline import SearchResult, run_search
+from repro.search.strategy import (ExhaustiveSearch, GreedyCostModel,
+                                   RandomSearch, SearchStrategy,
+                                   eligible_items, random_schedule)
+
+__all__ = [
+    "BatchEvaluator", "canonical_key",
+    "MCTSSearch",
+    "SearchResult", "run_search",
+    "ExhaustiveSearch", "GreedyCostModel", "RandomSearch",
+    "SearchStrategy", "eligible_items", "random_schedule",
+]

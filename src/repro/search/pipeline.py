@@ -1,0 +1,106 @@
+"""The single search entry point: strategy x evaluator -> dataset.
+
+``run_search`` is the one code path behind the paper reproduction
+(benchmarks/paper.py), the SpMV baseline, and the LM-step scenario
+(examples/schedule_search.py): it drives any :class:`SearchStrategy`
+against a :class:`BatchEvaluator` and collects the deduplicated
+(schedule, time) observations. ``SearchResult.dataset()`` then emits the
+(features, labels, times) triple consumed by the learning stack
+(:mod:`repro.core.labels` / :mod:`repro.core.dtree` /
+:mod:`repro.core.rules`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.costmodel import Machine
+from repro.core.dag import Graph, Schedule
+from repro.core.features import FeatureMatrix, featurize
+from repro.core.labels import Labeling, label_times
+from repro.search.evaluator import BatchEvaluator
+from repro.search.strategy import SearchStrategy
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Deduplicated observations from one search run."""
+
+    graph: Graph
+    schedules: list[Schedule]
+    times: list[float]
+    n_proposed: int
+    cache_hits: int
+    cache_misses: int
+
+    def best(self) -> tuple[Schedule, float]:
+        if not self.schedules:
+            raise ValueError(
+                "empty search result (budget 0 or strategy proposed "
+                "nothing) has no best schedule")
+        i = int(np.argmin(self.times))
+        return self.schedules[i], self.times[i]
+
+    def times_array(self) -> np.ndarray:
+        return np.asarray(self.times, dtype=np.float64)
+
+    def dataset(self) -> tuple[FeatureMatrix, Labeling, np.ndarray]:
+        """(features, labels, times) for the rules pipeline."""
+        times = self.times_array()
+        return (featurize(self.graph, self.schedules),
+                label_times(times), times)
+
+
+def run_search(graph: Graph, strategy: SearchStrategy,
+               machine: Machine | None = None,
+               budget: int | None = 2000,
+               batch_size: int = 1,
+               evaluator: BatchEvaluator | None = None) -> SearchResult:
+    """Drive ``strategy`` for up to ``budget`` evaluations.
+
+    ``budget`` counts proposals (evaluations), not distinct schedules;
+    ``None`` means run until the strategy exhausts (only safe for
+    strategies with a finite space, e.g. :class:`ExhaustiveSearch`).
+    ``batch_size`` is how many schedules are requested per ``propose``
+    call; 1 reproduces the paper's strictly sequential loop (each
+    observation lands before the next proposal), larger values trade
+    strategy-state freshness for evaluator throughput.
+
+    Every proposal is evaluated and fed back via ``observe``; the result
+    keeps the first observation per canonical schedule (matching how the
+    paper's MCTS records its rollout set). Pass either ``machine`` or a
+    preconfigured ``evaluator`` (which owns its machine), not both; a
+    shared evaluator keeps its memo cache across runs, and the result's
+    cache counters report this run's traffic only.
+    """
+    if evaluator is not None and machine is not None:
+        raise ValueError(
+            "pass either machine= or evaluator= (the evaluator already "
+            "owns a machine), not both")
+    ev = evaluator if evaluator is not None else \
+        BatchEvaluator(graph, machine)
+    hits0, misses0 = ev.cache_hits, ev.cache_misses
+    schedules: list[Schedule] = []
+    times: list[float] = []
+    seen: set[tuple] = set()
+    n_proposed = 0
+
+    while budget is None or n_proposed < budget:
+        ask = batch_size if budget is None else \
+            min(batch_size, budget - n_proposed)
+        batch = strategy.propose(ask)
+        if not batch:
+            break
+        n_proposed += len(batch)
+        for schedule, (key, t) in zip(batch, ev.evaluate_keyed(batch)):
+            strategy.observe(schedule, t)
+            if key not in seen:
+                seen.add(key)
+                schedules.append(schedule)
+                times.append(t)
+
+    return SearchResult(graph=graph, schedules=schedules, times=times,
+                        n_proposed=n_proposed,
+                        cache_hits=ev.cache_hits - hits0,
+                        cache_misses=ev.cache_misses - misses0)

@@ -1,0 +1,169 @@
+"""The :class:`SearchStrategy` protocol and the stateless strategies.
+
+All design-space exploration in this repo — the paper's MCTS (§III-C),
+exhaustive enumeration (§III-C2 / Fig. 1), and the cheaper baselines —
+speaks one interface:
+
+    propose(budget) -> up to ``budget`` candidate Schedules
+    observe(schedule, time)  -> feed one measured/simulated time back
+
+The caller (:func:`repro.search.pipeline.run_search`) owns evaluation:
+strategies never call the cost model on complete schedules themselves,
+so evaluation can be batched, memoized, or replaced (wall-clock executor,
+noisy objective, learned surrogate) without touching any strategy.
+
+A strategy may return fewer schedules than asked — returning an empty
+list means the space is exhausted and the search loop stops.
+"""
+from __future__ import annotations
+
+import random
+from typing import Iterator, Protocol, runtime_checkable
+
+from repro.core.costmodel import Machine, op_durations, simulate
+from repro.core.dag import BoundOp, Graph, OpKind, Schedule
+from repro.core.enumerate import enumerate_schedules
+
+
+@runtime_checkable
+class SearchStrategy(Protocol):
+    """Pluggable explorer of the (traversal x stream-binding) space."""
+
+    def propose(self, budget: int) -> list[Schedule]:
+        """Return up to ``budget`` candidate schedules (empty = done)."""
+        ...
+
+    def observe(self, schedule: Schedule, time: float) -> None:
+        """Feed back the measured time of a proposed schedule."""
+        ...
+
+
+def eligible_items(graph: Graph, prefix: list[BoundOp],
+                   n_streams: int) -> list[BoundOp]:
+    """Eligible next items from a prefix, stream-bijection pruned.
+
+    GPU ops may bind to any stream already in use, or the lowest-numbered
+    unused stream — the canonical first-use labeling of §III-C2, so every
+    complete schedule built through this helper is canonical by
+    construction. Shared by MCTS expansion, random rollouts, and greedy
+    completion.
+    """
+    scheduled = {b.name for b in prefix}
+    used = sorted({b.stream for b in prefix if b.stream is not None})
+    options: list[BoundOp] = []
+    for name in graph.eligible(scheduled):
+        if graph.ops[name].kind is OpKind.GPU:
+            for s in used:
+                options.append(BoundOp(name, s))
+            if len(used) < n_streams:
+                options.append(BoundOp(name, len(used)))
+        else:
+            options.append(BoundOp(name))
+    return options
+
+
+def random_schedule(graph: Graph, n_streams: int,
+                    rng: random.Random) -> Schedule:
+    """Uniform random canonical schedule (the MCTS rollout policy)."""
+    prefix: list[BoundOp] = []
+    while True:
+        options = eligible_items(graph, prefix, n_streams)
+        if not options:
+            return Schedule(tuple(prefix))
+        prefix.append(rng.choice(options))
+
+
+class ExhaustiveSearch:
+    """Adapter over :func:`repro.core.enumerate.enumerate_schedules`.
+
+    Proposes the canonical enumeration order; ``observe`` is a no-op.
+    Exhausts after one full sweep of the space.
+    """
+
+    def __init__(self, graph: Graph, n_streams: int):
+        self.graph = graph
+        self.n_streams = n_streams
+        self._iter: Iterator[Schedule] = enumerate_schedules(graph, n_streams)
+
+    def propose(self, budget: int) -> list[Schedule]:
+        out: list[Schedule] = []
+        for s in self._iter:
+            out.append(s)
+            if len(out) >= budget:
+                break
+        return out
+
+    def observe(self, schedule: Schedule, time: float) -> None:
+        pass
+
+
+class RandomSearch:
+    """I.i.d. uniform rollouts — the paper's unguided baseline.
+
+    Duplicates are possible (and cheap: the batch evaluator memoizes);
+    the strategy never exhausts on its own, so the pipeline budget is the
+    only stopping criterion.
+    """
+
+    def __init__(self, graph: Graph, n_streams: int, seed: int = 0):
+        self.graph = graph
+        self.n_streams = n_streams
+        self.rng = random.Random(seed)
+
+    def propose(self, budget: int) -> list[Schedule]:
+        return [random_schedule(self.graph, self.n_streams, self.rng)
+                for _ in range(budget)]
+
+    def observe(self, schedule: Schedule, time: float) -> None:
+        pass
+
+
+class GreedyCostModel:
+    """Epsilon-greedy construction guided by prefix simulation.
+
+    Each schedule is grown item by item; at every step the candidate
+    extensions are scored by simulating the *partial* schedule under the
+    analytic machine model and the arg-min is taken (ties broken by
+    canonical item order). With probability ``epsilon`` a uniformly
+    random extension is taken instead, so repeated proposals explore
+    beyond the single pure-greedy trajectory. The first proposal of a
+    run is always pure greedy (epsilon applies from the second on).
+    """
+
+    def __init__(self, graph: Graph, n_streams: int,
+                 machine: Machine | None = None,
+                 epsilon: float = 0.25, seed: int = 0):
+        self.graph = graph
+        self.n_streams = n_streams
+        self.machine = machine or Machine()
+        self.epsilon = epsilon
+        self.rng = random.Random(seed)
+        self._n_proposed = 0
+        self._durations = op_durations(graph, self.machine)
+
+    def _prefix_cost(self, prefix: list[BoundOp]) -> float:
+        return simulate(self.graph, Schedule(tuple(prefix)),
+                        self.machine,
+                        durations=self._durations).makespan
+
+    def _build(self, greedy_only: bool) -> Schedule:
+        prefix: list[BoundOp] = []
+        while True:
+            options = eligible_items(self.graph, prefix, self.n_streams)
+            if not options:
+                return Schedule(tuple(prefix))
+            if not greedy_only and self.rng.random() < self.epsilon:
+                prefix.append(self.rng.choice(options))
+                continue
+            best = min(options, key=lambda o: self._prefix_cost(prefix + [o]))
+            prefix.append(best)
+
+    def propose(self, budget: int) -> list[Schedule]:
+        out: list[Schedule] = []
+        for _ in range(budget):
+            out.append(self._build(greedy_only=self._n_proposed == 0))
+            self._n_proposed += 1
+        return out
+
+    def observe(self, schedule: Schedule, time: float) -> None:
+        pass

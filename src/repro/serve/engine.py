@@ -74,7 +74,8 @@ def serve_shardings(model: LM, mesh: Mesh, batch: int, t_max: int,
     c_shapes = jax.eval_shape(
         lambda: model.init_caches(batch, t_max, n_memory=n_memory))
     c_sh = shd.tree_shardings(c_axes, mesh, rules, c_shapes)
-    tok_sh = NamedSharding(mesh, shd.batch_spec(mesh, 1, rules))
+    tok_sh = NamedSharding(mesh, shd.batch_spec(mesh, 1, rules,
+                                                batch_size=batch))
     return p_sh, c_sh, tok_sh
 
 

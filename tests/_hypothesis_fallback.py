@@ -1,0 +1,103 @@
+"""Seeded-random stand-in for ``hypothesis`` (tier-1 has no such dep).
+
+The tier-1 container guarantees only numpy/jax/pytest; property tests
+import hypothesis when it exists and fall back to this module otherwise:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+
+The shim covers exactly the subset this repo's tests use — ``given``
+over positional strategies, ``settings(max_examples=..., deadline=...)``,
+and the ``floats`` / ``integers`` / ``lists`` / ``sampled_from``
+strategies. Examples are drawn from ``random.Random`` seeded per example
+index, so failures reproduce exactly across runs and machines (no
+shrinking, no database — deterministic generation is the point).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from types import SimpleNamespace
+from typing import Any, Callable
+
+_DEFAULT_MAX_EXAMPLES = 20
+_SEED_STRIDE = 7919  # prime stride decorrelates per-example streams
+
+
+class _Strategy:
+    """A draw function rng -> value."""
+
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self.draw = draw
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def lists(elements: _Strategy, min_size: int = 0,
+          max_size: int = 10) -> _Strategy:
+    def draw(rng: random.Random) -> list:
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: rng.choice(options))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             **_ignored) -> Callable:
+    """Record the example budget on the (already ``given``-wrapped)
+    test function; other hypothesis knobs (deadline, ...) are ignored."""
+
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy) -> Callable:
+    """Run the test once per generated example, appending drawn values
+    after any pytest-provided arguments (fixtures)."""
+
+    def deco(fn: Callable) -> Callable:
+        # The strategies bind to the trailing parameters (hypothesis
+        # semantics for positional ``given``); anything before them is a
+        # pytest fixture, which pytest passes by keyword.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        split = len(params) - len(strategies)
+        drawn_names = [p.name for p in params[split:]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(17 + _SEED_STRIDE * i)
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(drawn_names, strategies)}
+                fn(*args, **kwargs, **drawn)
+
+        # Hide the strategy-bound parameters from pytest so it doesn't
+        # look for fixtures with those names.
+        wrapper.__signature__ = sig.replace(parameters=params[:split])
+        del wrapper.__wrapped__  # keep pytest off the original signature
+        return wrapper
+
+    return deco
+
+
+strategies = SimpleNamespace(floats=floats, integers=integers,
+                             lists=lists, sampled_from=sampled_from)

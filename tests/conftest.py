@@ -1,0 +1,35 @@
+"""Shared test configuration: deterministic seeding + markers.
+
+Every test runs with the global ``random`` and legacy numpy RNGs
+re-seeded, so test order / ``-k`` selections / partial runs cannot
+change outcomes (library code that takes explicit seeds is unaffected —
+this only pins accidental global-state consumers).
+"""
+import os
+import random
+import sys
+
+import numpy as np
+import pytest
+
+# Make the repo root importable (``benchmarks`` is a plain directory,
+# used by the smoke test) alongside ``src`` from PYTHONPATH.
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO not in sys.path:
+    sys.path.insert(0, _REPO)
+
+GLOBAL_SEED = 0
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "smoke: 30-second end-to-end search->rules pass (select with "
+        "-m smoke)")
+
+
+@pytest.fixture(autouse=True)
+def deterministic_seed():
+    random.seed(GLOBAL_SEED)
+    np.random.seed(GLOBAL_SEED)
+    yield

@@ -1,0 +1,109 @@
+"""BatchEvaluator: bit-identical to per-schedule simulation, with a
+transposition/memo cache over canonical schedule hashes."""
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.search as S
+from repro.core.costmodel import Machine, op_durations
+from repro.core.dag import BoundOp, Schedule
+
+
+@pytest.fixture(scope="module")
+def spmv_space():
+    g = C.spmv_dag()
+    scheds = list(C.enumerate_schedules(g, 2))
+    return g, scheds
+
+
+def test_batched_bit_identical_to_costmodel(spmv_space):
+    """The whole 280-schedule SpMV space: batched evaluation must equal
+    per-schedule ``C.makespan`` exactly (== on floats, not isclose)."""
+    g, scheds = spmv_space
+    ev = S.BatchEvaluator(g)
+    batched = ev.evaluate(scheds)
+    naive = [C.makespan(g, s) for s in scheds]
+    assert batched == naive
+
+
+def test_batched_bit_identical_with_custom_machine(spmv_space):
+    g, scheds = spmv_space
+    m = Machine(flops_per_s=100e12, hbm_bytes_per_s=500e9,
+                launch_overhead_s=7e-6)
+    ev = S.BatchEvaluator(g, machine=m)
+    assert ev.evaluate(scheds[:50]) == \
+        [C.makespan(g, s, m) for s in scheds[:50]]
+
+
+def test_op_durations_match_simulate_fallback(spmv_space):
+    """The precomputed duration table feeds simulate() the exact values
+    its per-op fallback would compute."""
+    g, _ = spmv_space
+    m = Machine()
+    durs = op_durations(g, m)
+    for name, op in g.ops.items():
+        if op.duration is not None:
+            assert durs[name] == op.duration
+        elif op.kind is C.OpKind.GPU:
+            assert durs[name] == m.gpu_duration(op.flops, op.bytes_hbm)
+        else:
+            assert durs[name] == m.cpu_op_s
+
+
+def test_memo_cache_hits_on_reproposal(spmv_space):
+    g, scheds = spmv_space
+    batch = scheds[:40]
+    ev = S.BatchEvaluator(g)
+    first = ev.evaluate(batch)
+    assert (ev.cache_hits, ev.cache_misses) == (0, 40)
+    second = ev.evaluate(batch)
+    assert second == first
+    assert (ev.cache_hits, ev.cache_misses) == (40, 40)
+    assert len(ev) == 40  # no new cache entries
+
+
+def test_memo_cache_within_one_batch(spmv_space):
+    g, scheds = spmv_space
+    dup = [scheds[0], scheds[1], scheds[0], scheds[0]]
+    ev = S.BatchEvaluator(g)
+    out = ev.evaluate(dup)
+    assert out[0] == out[2] == out[3]
+    assert (ev.cache_hits, ev.cache_misses) == (2, 2)
+
+
+def test_memo_cache_is_bijection_aware(spmv_space):
+    """A stream-relabeled (non-canonical) schedule is the same
+    implementation — it must hit the cache entry of its canonical twin
+    and get the identical makespan."""
+    g, scheds = spmv_space
+    two_stream = next(s for s in scheds
+                      if len(set(s.streams().values())) == 2)
+    relabeled = Schedule(tuple(
+        BoundOp(i.name, 1 - i.stream if i.stream is not None else None)
+        for i in two_stream.items))
+    assert relabeled.key() != two_stream.key()
+    ev = S.BatchEvaluator(g)
+    t0 = ev.evaluate([two_stream])[0]
+    t1 = ev.evaluate([relabeled])[0]
+    assert t1 == t0
+    assert (ev.cache_hits, ev.cache_misses) == (1, 1)
+    assert t0 == C.makespan(g, relabeled)
+
+
+def test_noise_is_post_cache_and_seeded(spmv_space):
+    g, scheds = spmv_space
+    s = scheds[0]
+    ev_a = S.BatchEvaluator(g, noise_sigma=0.05, noise_seed=11)
+    ev_b = S.BatchEvaluator(g, noise_sigma=0.05, noise_seed=11)
+    a = ev_a.evaluate([s, s, s])
+    assert a == ev_b.evaluate([s, s, s])  # seeded: reproducible
+    assert len(set(a)) > 1  # fresh noise per evaluation, even on hits
+    assert ev_a.cache_misses == 1  # underlying makespan cached once
+    clean = C.makespan(g, s)
+    assert all(abs(t / clean - 1.0) < 0.5 for t in a)
+
+
+def test_evaluate_one_matches_makespan(spmv_space):
+    g, scheds = spmv_space
+    ev = S.BatchEvaluator(g)
+    assert ev.evaluate_one(scheds[7]) == C.makespan(g, scheds[7])

@@ -1,7 +1,11 @@
 """Labels, features, decision tree, and rules — unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container: seeded-random fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 import repro.core as C
 from repro.core.labels import (find_peaks, label_times, peak_prominences,

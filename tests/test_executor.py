@@ -4,7 +4,10 @@ import random
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # tier-1 container: seeded-random fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 import repro.core as C
 

@@ -1,0 +1,16 @@
+"""End-to-end smoke gate (select with ``pytest -m smoke``)."""
+import pytest
+
+from benchmarks.smoke import run_smoke
+
+
+@pytest.mark.smoke
+def test_smoke_search_to_rules_end_to_end():
+    out = run_smoke(budget=200, seed=0)
+    assert out["wall_s"] < 30.0
+    assert out["n_evaluations"] == 200
+    assert 1 <= out["n_schedules"] <= 200
+    assert out["spread"] > 1.1          # schedule choice matters
+    assert out["n_classes"] >= 1
+    assert out["n_rulesets"] >= 1
+    assert out["training_error"] <= 0.05
