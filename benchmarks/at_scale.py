@@ -1,0 +1,57 @@
+"""At-scale search benchmarks on spaces exhaustive sweeps cannot touch.
+
+``spmv_dag_fine`` (>5e5 implementations) and ``halo3d_dag`` are far
+beyond exhaustive enumeration; here the greedy→MCTS→surrogate
+portfolio races plain MCTS under an *equal discrete-event-simulation
+budget* (``run_search(sim_budget=...)``, batch_size=1 for an exact
+cap). Rows report best makespans, the portfolio-vs-MCTS ratio, and the
+surrogate's screening quality (candidates screened per simulation
+spent, Spearman rank correlation of predicted vs simulated times).
+"""
+from __future__ import annotations
+
+import time
+
+import repro.search as S
+from repro.core.dag import halo3d_dag, spmv_dag_fine
+
+
+def _race(name: str, graph, sim_budget: int, seed: int = 0) -> list[str]:
+    t0 = time.perf_counter()
+    res_m = S.run_search(graph, S.MCTSSearch(graph, 2, seed=seed),
+                         budget=None, sim_budget=sim_budget, batch_size=1)
+    wall_m = (time.perf_counter() - t0) / max(1, res_m.cache_misses) * 1e6
+
+    # seed_proposals=0: greedy seeding pays prefix simulations the
+    # sim_budget meter cannot see, which would make the race unfair.
+    port = S.PortfolioSearch(graph, 2, seed=seed, seed_proposals=0)
+    t0 = time.perf_counter()
+    res_p = S.run_search(graph, port, budget=None,
+                         sim_budget=sim_budget, batch_size=1)
+    wall_p = (time.perf_counter() - t0) / max(1, res_p.cache_misses) * 1e6
+
+    best_m, best_p = res_m.best()[1], res_p.best()[1]
+    q = port.screening_quality()
+    screened_per_sim = q["n_screened"] / max(1, res_p.cache_misses)
+    return [
+        f"at_scale_{name}_sims,{wall_p:.2f},"
+        f"{res_p.cache_misses}_of_{sim_budget}",
+        f"at_scale_{name}_mcts_best_us,{wall_m:.2f},{best_m * 1e6:.2f}",
+        f"at_scale_{name}_portfolio_best_us,{wall_p:.2f},"
+        f"{best_p * 1e6:.2f}",
+        f"at_scale_{name}_portfolio_vs_mcts,{wall_p:.2f},"
+        f"{best_p / best_m:.4f}",
+        f"at_scale_{name}_screened_per_sim,{wall_p:.2f},"
+        f"{screened_per_sim:.1f}",
+        f"at_scale_{name}_surrogate_spearman,{wall_p:.2f},"
+        f"{q['spearman']:.3f}",
+        f"at_scale_{name}_surrogate_rel_err,{wall_p:.2f},"
+        f"{q['mean_rel_err']:.3f}",
+    ]
+
+
+def at_scale_benches() -> list[str]:
+    rows = []
+    rows += _race("spmv_fine", spmv_dag_fine(), sim_budget=400)
+    rows += _race("halo3d", halo3d_dag(), sim_budget=300)
+    return rows

@@ -72,6 +72,14 @@ def search_eval_benches() -> list[str]:
     t_rand = (time.perf_counter() - t0) / res.n_proposed
     rows.append(f"search_random_pipeline,{t_rand * 1e6:.2f},"
                 f"hit_rate={res.cache_hits / res.n_proposed:.2f}")
+
+    port = S.PortfolioSearch(g, 2, seed=0)
+    t0 = time.perf_counter()
+    res = S.run_search(g, port, budget=2000)
+    t_port = (time.perf_counter() - t0) / res.n_proposed
+    q = port.screening_quality()
+    rows.append(f"search_portfolio_pipeline,{t_port * 1e6:.2f},"
+                f"screened={q['n_screened']}/rho={q['spearman']:.2f}")
     return rows
 
 

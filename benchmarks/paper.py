@@ -155,11 +155,13 @@ def granularity_ablation() -> list[str]:
     Fine-grained per-neighbor Pack/Send/Recv vertices remove false
     dependencies but (a) explode the space (>5e5 vs 280) and (b) add
     per-op launch/host overhead that outweighs the overlap they enable
-    at these message sizes."""
+    at these message sizes. The fine space is searched with the
+    greedy→MCTS→surrogate portfolio (the at-scale recipe; plain MCTS
+    vs portfolio is raced head-to-head in benchmarks/at_scale.py)."""
     from repro.core.dag import spmv_dag_fine
     g_fine = spmv_dag_fine()
     t0 = time.perf_counter()
-    res = S.run_search(g_fine, S.MCTSSearch(g_fine, 2, seed=0),
+    res = S.run_search(g_fine, S.PortfolioSearch(g_fine, 2, seed=0),
                        budget=2000)
     wall = (time.perf_counter() - t0) / 2000 * 1e6
     tf = res.times_array()

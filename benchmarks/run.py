@@ -1,7 +1,26 @@
-"""Benchmark harness — one function per paper table/figure, plus kernel
-and substrate microbenches. Prints ``name,us_per_call,derived`` CSV."""
+"""Benchmark harness — one function per paper table/figure, plus kernel,
+substrate, featurization, and at-scale search benches.
+
+Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
+writes the same rows as machine-readable JSON
+(``[{"name":..., "us_per_call":..., "derived":...}, ...]``) so the
+perf trajectory can accumulate across PRs, e.g.::
+
+    PYTHONPATH=src python benchmarks/run.py --json BENCH_2.json
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import sys
+
+# Allow ``python benchmarks/run.py`` (script dir on sys.path, repo root
+# not): the ``benchmarks`` package lives one level up.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.at_scale import at_scale_benches
+from benchmarks.featurize_bench import featurize_benches
 from benchmarks.kernels_bench import (kernel_benches, model_benches,
                                       search_eval_benches)
 from benchmarks.paper import (fig1_spread, fig4_labels, fig5_tree,
@@ -9,15 +28,40 @@ from benchmarks.paper import (fig1_spread, fig4_labels, fig5_tree,
                               stepdag_overlap, table5_accuracy,
                               tables678_rules)
 
+BENCH_FNS = (fig1_spread, fig4_labels, fig5_tree, table5_accuracy,
+             tables678_rules, stepdag_overlap, granularity_ablation,
+             noise_robustness, featurize_benches, at_scale_benches,
+             search_eval_benches, kernel_benches, model_benches)
+
+
+def parse_row(row: str) -> dict:
+    """``name,us_per_call,derived`` CSV line -> JSON-ready dict.
+
+    ``derived`` may itself contain commas (class-size lists etc.), so
+    only the first two fields are split off.
+    """
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as a JSON list to PATH")
+    args = ap.parse_args()
+
+    rows: list[str] = []
     print("name,us_per_call,derived")
-    for fn in (fig1_spread, fig4_labels, fig5_tree, table5_accuracy,
-               tables678_rules, stepdag_overlap, granularity_ablation,
-               noise_robustness, search_eval_benches, kernel_benches,
-               model_benches):
+    for fn in BENCH_FNS:
         for row in fn():
             print(row, flush=True)
+            rows.append(row)
+
+    if args.json:
+        records = [parse_row(row) for row in rows]
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"# wrote {len(records)} rows to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

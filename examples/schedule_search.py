@@ -3,13 +3,16 @@ overlap design rules for OUR OWN train step.
 
 The LM train step decomposes into an op-DAG (per-layer fwd/bwd compute,
 per-layer gradient reduce-scatters, the optimizer update). "Streams" are
-the TPU compute stream + ICI channels. MCTS + the machine model search
-the (emission order x channel assignment) space; the decision tree then
-emits human-readable rules like "rs0 before bwd2" or "rs1 different
-stream than bwd1" — exactly the paper's output, for a 2026 workload.
+the TPU compute stream + ICI channels. The search portfolio (greedy
+seeding → MCTS refinement → surrogate-screened exploitation) + the
+machine model search the (emission order x channel assignment) space;
+the decision tree then emits human-readable rules like "rs0 before
+bwd2" or "rs1 different stream than bwd1" — exactly the paper's
+output, for a 2026 workload.
 
 Usage: PYTHONPATH=src python examples/schedule_search.py
            [--arch qwen2.5-32b] [--layers 4] [--iters 600]
+           [--strategy portfolio|mcts]
 """
 import argparse
 
@@ -42,6 +45,10 @@ def main() -> None:
                     help="coarse pipeline stages in the DAG")
     ap.add_argument("--iters", type=int, default=600)
     ap.add_argument("--channels", type=int, default=2)
+    ap.add_argument("--strategy", choices=("portfolio", "mcts"),
+                    default="portfolio",
+                    help="portfolio = greedy seeding + MCTS refinement "
+                         "+ surrogate-screened exploitation")
     args = ap.parse_args()
 
     costs = costs_from_arch(args.arch, args.layers,
@@ -51,8 +58,11 @@ def main() -> None:
     print(f"train-step DAG for {args.arch}: {graph.n_vertices()} ops, "
           f"{args.layers} stages")
 
-    res = S.run_search(graph, S.MCTSSearch(graph, args.channels, seed=0),
-                       budget=args.iters)
+    if args.strategy == "portfolio":
+        strategy = S.PortfolioSearch(graph, args.channels, seed=0)
+    else:
+        strategy = S.MCTSSearch(graph, args.channels, seed=0)
+    res = S.run_search(graph, strategy, budget=args.iters)
     times = res.times_array()
     best, best_t = res.best()
     print(f"explored {len(res.schedules)} schedules "
@@ -60,6 +70,11 @@ def main() -> None:
           f"best {times.min() * 1e3:.2f} ms, "
           f"worst {times.max() * 1e3:.2f} ms "
           f"({times.max() / times.min():.2f}x)")
+    if args.strategy == "portfolio":
+        q = strategy.screening_quality()
+        print(f"surrogate screened {q['n_screened']} candidates "
+              f"({q['n_compared']} simulated; rank corr "
+              f"{q['spearman']:.2f})")
     print("best emission order:",
           " ".join(str(i) for i in best.items
                    if i.name not in ("start", "end")))

@@ -18,8 +18,9 @@ from repro.core.enumerate import count_schedules, enumerate_schedules
 from repro.core.costmodel import Machine, SimResult, makespan, simulate
 from repro.core.mcts import MCTS, MCTSResult
 from repro.core.labels import Labeling, label_times
-from repro.core.features import (Feature, FeatureMatrix, featurize,
-                                 featurize_like)
+from repro.core.features import (DegenerateFeatureSpaceError, Feature,
+                                 FeatureBasis, FeatureMatrix,
+                                 apply_features, featurize, featurize_like)
 from repro.core.dtree import DecisionTree, TreeSearchTrace, algorithm1
 from repro.core.rules import (Rule, RuleSet, annotate_vs_canonical,
                               class_range_accuracy, extract_rulesets,
@@ -35,7 +36,8 @@ __all__ = [
     "Machine", "SimResult", "makespan", "simulate",
     "MCTS", "MCTSResult",
     "Labeling", "label_times",
-    "Feature", "FeatureMatrix", "featurize", "featurize_like",
+    "DegenerateFeatureSpaceError", "Feature", "FeatureBasis",
+    "FeatureMatrix", "apply_features", "featurize", "featurize_like",
     "DecisionTree", "TreeSearchTrace", "algorithm1",
     "Rule", "RuleSet", "annotate_vs_canonical", "class_range_accuracy",
     "extract_rulesets", "render_rules_table", "rules_by_class",

@@ -85,6 +85,10 @@ class Graph:
         self.ops: dict[str, Op] = {}
         self.preds: dict[str, set[str]] = {}
         self.succs: dict[str, set[str]] = {}
+        # Bumped on every mutation; derived-table caches (e.g. the sync
+        # expansion tables in repro.core.sync) key on it so a graph
+        # mutated after first use is never served stale data.
+        self.version = 0
         self.add_op(Op(self.START, OpKind.CPU, duration=0.0))
         self.add_op(Op(self.END, OpKind.CPU, duration=0.0))
 
@@ -92,6 +96,7 @@ class Graph:
     def add_op(self, op: Op) -> Op:
         if op.name in self.ops:
             raise ValueError(f"duplicate op name {op.name!r}")
+        self.version += 1
         self.ops[op.name] = op
         self.preds[op.name] = set()
         self.succs[op.name] = set()
@@ -100,6 +105,7 @@ class Graph:
     def add_edge(self, u: str, v: str) -> None:
         if u not in self.ops or v not in self.ops:
             raise KeyError(f"unknown op in edge {u!r}->{v!r}")
+        self.version += 1
         self.preds[v].add(u)
         self.succs[u].add(v)
 

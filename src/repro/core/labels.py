@@ -24,7 +24,11 @@ import numpy as np
 def step_convolve(sorted_times: np.ndarray, radius: int) -> np.ndarray:
     """Convolution of the sorted data with the paper's step kernel.
 
-    out[i] = sum_{m=1..r} a[i+m] - sum_{m=-r+1..0} a[i+m]
+    The §IV-A kernel is -1 on [-r, 0] (r+1 values) and +1 on [1, r]
+    (r values):
+
+        out[i] = sum_{m=1..r} a[i+m] - sum_{m=-r..0} a[i+m]
+
     computed for i where both windows are in-bounds. Returned array is
     aligned with the input (non-computable entries are 0).
     """
@@ -41,7 +45,7 @@ def step_convolve(sorted_times: np.ndarray, radius: int) -> np.ndarray:
 
     idx = np.arange(r, n - r)
     right = window(idx + 1, idx + r)      # m = 1..r  (r values)
-    left = window(idx - r + 1, idx)       # m = -r+1..0 (r values)
+    left = window(idx - r, idx)           # m = -r..0 (r+1 values)
     out[idx] = right - left
     return out
 

@@ -85,6 +85,7 @@ def with_comm_durations(graph: Graph, link_bytes_per_s: float,
     out.ops = {}
     out.preds = {k: set(v) for k, v in graph.preds.items()}
     out.succs = {k: set(v) for k, v in graph.succs.items()}
+    out.version = 0  # fresh object: caches key on identity + version
     for name, op in graph.ops.items():
         if op.kind is OpKind.GPU and op.comm_bytes:
             dur = latency_s + op.comm_bytes / link_bytes_per_s

@@ -24,6 +24,7 @@ On TPU these map to token joins between serialization chains
 from __future__ import annotations
 
 import dataclasses
+import weakref
 
 from repro.core.dag import BoundOp, Graph, OpKind, Schedule
 
@@ -115,5 +116,57 @@ def expand(graph: Graph, schedule: Schedule) -> list[ExpandedItem]:
     return expanded
 
 
+# Featurization expands every schedule in a corpus, and only needs the
+# item *names*; constructing ExpandedItem records for each of them is
+# the dominant cost of :func:`repro.core.features.featurize`. The fast
+# path below re-derives just the name sequence from per-graph tables
+# (cached weakly, so graphs stay collectable). It is locked to
+# :func:`expand` by tests/test_core_dag.py::test_expanded_names_
+# matches_expand.
+
+_SYNC_TABLES: "weakref.WeakKeyDictionary[Graph, tuple]" = \
+    weakref.WeakKeyDictionary()
+
+
+def _sync_tables(graph: Graph) -> tuple:
+    cached = _SYNC_TABLES.get(graph)
+    if cached is not None and cached[0] == graph.version:
+        return cached[1]
+    is_gpu = {n: op.kind is OpKind.GPU for n, op in graph.ops.items()}
+    gpu_preds = {n: tuple(u for u in sorted(p) if is_gpu[u])
+                 for n, p in graph.preds.items()}
+    succ_info = {n: tuple((v, is_gpu[v]) for v in graph.succs[n])
+                 for n in graph.ops}
+    ces = {n: f"CES-b4-{n}" for n in graph.ops}
+    cswe = {n: f"CSWE-b4-{n}" for n in graph.ops}
+    cer = {n: f"CER-after-{n}" for n in graph.ops}
+    tables = (is_gpu, gpu_preds, succ_info, ces, cswe, cer)
+    _SYNC_TABLES[graph] = (graph.version, tables)
+    return tables
+
+
 def expanded_names(graph: Graph, schedule: Schedule) -> list[str]:
-    return [it.name for it in expand(graph, schedule)]
+    """Names of the expanded sequence (fast path of :func:`expand`)."""
+    is_gpu, gpu_preds, succ_info, ces, cswe, cer = _sync_tables(graph)
+    streams = {it.name: it.stream for it in schedule.items
+               if it.stream is not None}
+    out: list[str] = []
+    for it in schedule.items:
+        name = it.name
+        gp = gpu_preds[name]
+        if is_gpu[name]:
+            st = it.stream
+            for u in gp:
+                if streams[u] != st:
+                    out.append(cswe[name])
+                    break
+            out.append(name)
+            for v, v_gpu in succ_info[name]:
+                if not v_gpu or streams.get(v) != st:
+                    out.append(cer[name])
+                    break
+        else:
+            if gp:
+                out.append(ces[name])
+            out.append(name)
+    return out

@@ -5,7 +5,8 @@ a rules dict maps logical names to mesh axes. :func:`spec_for` resolves
 names to a :class:`jax.sharding.PartitionSpec` with three safeguards:
 
   * every mesh axis is used by at most one array dimension (first dim
-    in order wins; later dims wanting a taken axis replicate),
+    in order wins; a later dim whose rule names a taken axis shards on
+    the rule's remaining untaken axes, or replicates if none are left),
   * a dimension only shards if its size divides the product of its mesh
     axes (non-divisible dims silently replicate — e.g. a global batch
     of 1, or 15 heads on a 16-way model axis),

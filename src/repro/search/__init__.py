@@ -1,10 +1,11 @@
 """Unified design-space search subsystem.
 
-One strategy protocol (:class:`SearchStrategy`), four strategies
-(exhaustive, MCTS, random, greedy-cost-model), a batched + memoized
-evaluator, and the :func:`run_search` pipeline that turns any of them
-into the (features, labels, times) dataset the rules pipeline consumes.
-See README.md in this package for the contract.
+One strategy protocol (:class:`SearchStrategy`); strategies from
+exhaustive enumeration to the surrogate-screened two-stage search and
+the greedy→MCTS→surrogate portfolio; a batched + memoized evaluator;
+and the :func:`run_search` pipeline that turns any of them into the
+(features, labels, times) dataset the rules pipeline consumes. See
+README.md in this package for the contract.
 """
 from repro.search.evaluator import BatchEvaluator, canonical_key
 from repro.search.mcts import MCTSSearch
@@ -12,6 +13,8 @@ from repro.search.pipeline import SearchResult, run_search
 from repro.search.strategy import (ExhaustiveSearch, GreedyCostModel,
                                    RandomSearch, SearchStrategy,
                                    eligible_items, random_schedule)
+from repro.search.surrogate import (PortfolioSearch, RidgeSurrogate,
+                                    SurrogateGuided, spearman)
 
 __all__ = [
     "BatchEvaluator", "canonical_key",
@@ -19,4 +22,5 @@ __all__ = [
     "SearchResult", "run_search",
     "ExhaustiveSearch", "GreedyCostModel", "RandomSearch",
     "SearchStrategy", "eligible_items", "random_schedule",
+    "PortfolioSearch", "RidgeSurrogate", "SurrogateGuided", "spearman",
 ]

@@ -20,6 +20,11 @@ Results are bit-identical to per-schedule
 cache, mimicking wall-clock measurement jitter: the underlying makespan
 is memoized, but every evaluation call draws fresh noise — matching how
 re-benchmarking a real program behaves.
+
+``cache_misses`` counts actual discrete-event simulations and is the
+meter behind ``run_search(sim_budget=N)``: equal-simulation
+comparisons between screened (surrogate) and unscreened strategies
+read it, so duplicates and surrogate-filtered candidates are free.
 """
 from __future__ import annotations
 

@@ -56,16 +56,35 @@ def run_search(graph: Graph, strategy: SearchStrategy,
                machine: Machine | None = None,
                budget: int | None = 2000,
                batch_size: int = 1,
-               evaluator: BatchEvaluator | None = None) -> SearchResult:
+               evaluator: BatchEvaluator | None = None,
+               sim_budget: int | None = None,
+               stall_limit: int = 1000) -> SearchResult:
     """Drive ``strategy`` for up to ``budget`` evaluations.
 
     ``budget`` counts proposals (evaluations), not distinct schedules;
-    ``None`` means run until the strategy exhausts (only safe for
-    strategies with a finite space, e.g. :class:`ExhaustiveSearch`).
+    ``None`` means run until the strategy exhausts — or, for
+    strategies that never return an empty batch, until ``stall_limit``
+    consecutive proposals yield no fresh simulation.
     ``batch_size`` is how many schedules are requested per ``propose``
     call; 1 reproduces the paper's strictly sequential loop (each
     observation lands before the next proposal), larger values trade
-    strategy-state freshness for evaluator throughput.
+    strategy-state freshness for evaluator throughput. A strategy that
+    returns more than it was asked for is clamped to the remaining
+    budget — the excess is neither evaluated nor counted.
+
+    ``sim_budget`` bounds *discrete-event simulations* (evaluator cache
+    misses) instead of proposals: the loop stops once the strategy has
+    spent that many distinct simulations. Checked between batches, so a
+    batch may overshoot by up to ``batch_size - 1``; use
+    ``batch_size=1`` for an exact cap. This is the fair-comparison knob
+    for strategies (e.g. surrogate screening) that trade many cheap
+    proposals for few expensive simulations. A strategy that never
+    exhausts (random rollouts, surrogate padding) makes no progress a
+    ``sim_budget`` or ``budget=None`` loop can observe once the space
+    runs out of new implementations; whenever the loop is not bounded
+    by a proposal ``budget``, ``stall_limit`` therefore breaks it
+    after that many consecutive proposals without a single fresh
+    simulation.
 
     Every proposal is evaluated and fed back via ``observe``; the result
     keeps the first observation per canonical schedule (matching how the
@@ -85,20 +104,30 @@ def run_search(graph: Graph, strategy: SearchStrategy,
     times: list[float] = []
     seen: set[tuple] = set()
     n_proposed = 0
+    stalled = 0
 
-    while budget is None or n_proposed < budget:
+    while ((budget is None or n_proposed < budget) and
+           (sim_budget is None or ev.cache_misses - misses0 < sim_budget)):
         ask = batch_size if budget is None else \
             min(batch_size, budget - n_proposed)
-        batch = strategy.propose(ask)
+        batch = strategy.propose(ask)[:ask]
         if not batch:
             break
         n_proposed += len(batch)
+        batch_misses0 = ev.cache_misses
         for schedule, (key, t) in zip(batch, ev.evaluate_keyed(batch)):
             strategy.observe(schedule, t)
             if key not in seen:
                 seen.add(key)
                 schedules.append(schedule)
                 times.append(t)
+        if sim_budget is not None or budget is None:
+            if ev.cache_misses == batch_misses0:
+                stalled += len(batch)
+                if stalled >= stall_limit:
+                    break
+            else:
+                stalled = 0
 
     return SearchResult(graph=graph, schedules=schedules, times=times,
                         n_proposed=n_proposed,

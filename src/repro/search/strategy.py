@@ -11,6 +11,8 @@ The caller (:func:`repro.search.pipeline.run_search`) owns evaluation:
 strategies never call the cost model on complete schedules themselves,
 so evaluation can be batched, memoized, or replaced (wall-clock executor,
 noisy objective, learned surrogate) without touching any strategy.
+The two-stage surrogate-screened strategies live in
+:mod:`repro.search.surrogate`; they speak this same protocol.
 
 A strategy may return fewer schedules than asked — returning an empty
 list means the space is exhausted and the search loop stops.
@@ -128,6 +130,11 @@ class GreedyCostModel:
     random extension is taken instead, so repeated proposals explore
     beyond the single pure-greedy trajectory. The first proposal of a
     run is always pure greedy (epsilon applies from the second on).
+
+    Greedy construction pays *prefix* simulations that bypass the
+    pipeline's :class:`BatchEvaluator` (and therefore the
+    ``run_search(sim_budget=)`` meter); ``n_prefix_sims`` counts them
+    so budget-accounting callers can report or charge the hidden cost.
     """
 
     def __init__(self, graph: Graph, n_streams: int,
@@ -140,8 +147,10 @@ class GreedyCostModel:
         self.rng = random.Random(seed)
         self._n_proposed = 0
         self._durations = op_durations(graph, self.machine)
+        self.n_prefix_sims = 0
 
     def _prefix_cost(self, prefix: list[BoundOp]) -> float:
+        self.n_prefix_sims += 1
         return simulate(self.graph, Schedule(tuple(prefix)),
                         self.machine,
                         durations=self._durations).makespan

@@ -1,0 +1,341 @@
+"""Two-stage (surrogate-screened) search and the strategy portfolio.
+
+The discrete-event simulation behind :class:`BatchEvaluator` is the
+expensive resource: one call per proposal caps how much of a >5e5-point
+space (``spmv_dag_fine``, ``halo3d_dag``) any strategy can see. The
+OptiML-style answer is two-stage evaluation: a cheap learned surrogate
+screens a large candidate pool, and only the surrogate's top-k reach
+the simulator. Everything here rides the existing
+``SearchStrategy``/``BatchEvaluator`` seam — the evaluator still owns
+simulation; the surrogate only decides *which* proposals are worth it.
+
+  * :class:`RidgeSurrogate` — ridge regression over the §IV-B
+    order/stream feature vectors, trained online from ``observe``d
+    (schedule, time) pairs via the incremental
+    :class:`repro.core.features.FeatureBasis` (new schedules are
+    absorbed without re-expanding the corpus).
+  * :class:`SurrogateGuided` — generates a candidate pool (uniform
+    rollouts + elite prefix mutations through ``eligible_items``),
+    scores the pool with the surrogate, and proposes only the argmin
+    top-k. Every screened→simulated pair is logged, so screening
+    quality (Spearman rank correlation, relative error) is reportable.
+  * :class:`PortfolioSearch` — greedy seeding → MCTS refinement →
+    surrogate-guided exploitation behind the plain strategy protocol,
+    the ROADMAP recipe for the at-scale spaces.
+"""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+from repro.core.costmodel import Machine
+from repro.core.dag import BoundOp, Graph, Schedule
+from repro.core.features import Feature, FeatureBasis, apply_features
+from repro.search.evaluator import canonical_key
+from repro.search.mcts import MCTSSearch
+from repro.search.strategy import (GreedyCostModel, eligible_items,
+                                   random_schedule)
+
+
+# -- rank statistics ---------------------------------------------------------
+
+def _average_ranks(x: np.ndarray) -> np.ndarray:
+    """Ranks with ties sharing their average rank (Spearman convention)."""
+    x = np.asarray(x, dtype=np.float64)
+    uniq, inv, counts = np.unique(x, return_inverse=True,
+                                  return_counts=True)
+    ends = np.cumsum(counts)
+    starts = ends - counts
+    return (0.5 * (starts + ends - 1))[inv]
+
+
+def spearman(a, b) -> float:
+    """Spearman rank correlation; 0.0 on degenerate (constant) input."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    if a.size != b.size:
+        raise ValueError(f"length mismatch {a.size} != {b.size}")
+    if a.size < 2:
+        return 0.0
+    ra = _average_ranks(a) - (a.size - 1) / 2.0
+    rb = _average_ranks(b) - (b.size - 1) / 2.0
+    denom = float(np.sqrt((ra * ra).sum() * (rb * rb).sum()))
+    if denom == 0.0:
+        return 0.0
+    return float((ra * rb).sum() / denom)
+
+
+# -- the surrogate model -----------------------------------------------------
+
+class RidgeSurrogate:
+    """Online ridge regression over order/stream feature vectors.
+
+    Observations accumulate into an incremental
+    :class:`~repro.core.features.FeatureBasis`; the model is refit
+    lazily (on the first ``predict`` once ``refit_every`` new
+    observations have landed since the last fit) by solving the
+    regularized normal equations on the constant-pruned feature matrix
+    — in the dual (n×n) form when there are more features than
+    observations, so wide spaces like ``halo3d_dag`` stay cheap. With
+    no (or degenerate) data it predicts the observed mean.
+    """
+
+    def __init__(self, graph: Graph, l2: float = 1e-3,
+                 refit_every: int = 8):
+        self.graph = graph
+        self.l2 = l2
+        self.refit_every = max(1, refit_every)
+        self.basis = FeatureBasis(graph)
+        self._times: list[float] = []
+        self._fitted_n = -1          # observation count at last fit
+        self._features: list[Feature] = []
+        self._w: np.ndarray | None = None
+        self._x_mean: np.ndarray | None = None
+        self._y_mean = 0.0
+
+    @property
+    def n_observations(self) -> int:
+        return len(self._times)
+
+    def observe(self, schedule: Schedule, time: float) -> None:
+        self.basis.add([schedule])
+        self._times.append(float(time))
+
+    def _stale(self) -> bool:
+        # Geometric backoff past the floor: each refit rebuilds the
+        # matrix for the whole corpus, so refitting every k
+        # observations would make cumulative featurization cost
+        # quadratic on long runs. Waiting for ~25% corpus growth keeps
+        # it linear (amortized) while the model stays fresh.
+        if self._fitted_n < 0:
+            return True
+        wait = max(self.refit_every, self._fitted_n // 4)
+        return len(self._times) - self._fitted_n >= wait
+
+    def _fit(self) -> None:
+        self._fitted_n = len(self._times)
+        y = np.asarray(self._times, dtype=np.float64)
+        self._y_mean = float(y.mean()) if y.size else 0.0
+        self._features, self._w, self._x_mean = [], None, None
+        if y.size < 2:
+            return
+        fm = self.basis.matrix()
+        if not fm.features:
+            return  # all observations identical: mean is the best guess
+        X = fm.X.astype(np.float64)
+        self._features = fm.features
+        self._x_mean = X.mean(axis=0)
+        Xc = X - self._x_mean
+        yc = y - self._y_mean
+        n, d = X.shape
+        lam = self.l2 * n
+        if d <= n:
+            self._w = np.linalg.solve(
+                Xc.T @ Xc + lam * np.eye(d), Xc.T @ yc)
+        else:  # dual form: identical w, but an n×n solve
+            alpha = np.linalg.solve(Xc @ Xc.T + lam * np.eye(n), yc)
+            self._w = Xc.T @ alpha
+
+    def predict(self, schedules: list[Schedule]) -> np.ndarray:
+        """Predicted times, one per schedule (refits if stale)."""
+        if self._stale():
+            self._fit()
+        if self._w is None:
+            return np.full(len(schedules), self._y_mean, dtype=np.float64)
+        X = apply_features(self.graph, schedules, self._features) \
+            .astype(np.float64)
+        return self._y_mean + (X - self._x_mean) @ self._w
+
+
+# -- the two-stage strategy --------------------------------------------------
+
+class SurrogateGuided:
+    """Propose argmin-of-surrogate candidates from a screened pool.
+
+    Each ``propose(k)`` builds a pool of ``pool_factor * k`` candidate
+    schedules — uniform random rollouts mixed with *elite mutations*
+    (truncate one of the best observed schedules at a random point and
+    recomplete it randomly through ``eligible_items``, so every
+    candidate is canonical by construction) — scores the pool with the
+    ridge surrogate, and returns the ``k`` candidates with the lowest
+    predicted time. Already-simulated schedules are excluded from the
+    pool, so the downstream evaluator spends its simulations on new
+    implementations.
+
+    Until ``warmup`` observations have arrived the strategy proposes
+    uniform rollouts (there is nothing to fit yet). Every prediction
+    that reaches simulation is logged in ``screen_log`` as
+    (predicted, simulated); :meth:`screening_quality` summarizes it.
+    """
+
+    def __init__(self, graph: Graph, n_streams: int, seed: int = 0,
+                 warmup: int = 32, pool_factor: int = 10,
+                 elite_frac: float = 0.25, mutation_prob: float = 0.5,
+                 l2: float = 1e-3, refit_every: int = 8):
+        if pool_factor < 1:
+            raise ValueError("pool_factor must be >= 1")
+        self.graph = graph
+        self.n_streams = n_streams
+        self.rng = random.Random(seed)
+        self.warmup = warmup
+        self.pool_factor = pool_factor
+        self.elite_frac = elite_frac
+        self.mutation_prob = mutation_prob
+        self.surrogate = RidgeSurrogate(graph, l2=l2,
+                                        refit_every=refit_every)
+        self._observed: dict[tuple, float] = {}     # canonical key -> time
+        self._elites: list[tuple[float, Schedule]] = []
+        self._pending: dict[tuple, float] = {}      # key -> predicted time
+        self.n_screened = 0                         # surrogate-scored pool
+        self.screen_log: list[tuple[float, float]] = []  # (pred, actual)
+
+    # -- candidate generation ------------------------------------------
+    def _mutate(self, elite: Schedule) -> Schedule:
+        items = list(elite.items)
+        cut = self.rng.randrange(1, len(items)) if len(items) > 1 else 0
+        prefix: list[BoundOp] = items[:cut]
+        while True:
+            options = eligible_items(self.graph, prefix, self.n_streams)
+            if not options:
+                return Schedule(tuple(prefix))
+            prefix.append(self.rng.choice(options))
+
+    def _candidate(self) -> Schedule:
+        if self._elites and self.rng.random() < self.mutation_prob:
+            _, elite = self.rng.choice(self._elites)
+            return self._mutate(elite)
+        return random_schedule(self.graph, self.n_streams, self.rng)
+
+    def _pool(self, size: int) -> list[Schedule]:
+        """Up to ``size`` novel candidates (deduped, not yet simulated)."""
+        pool: list[Schedule] = []
+        keys: set[tuple] = set()
+        for _ in range(4 * size):
+            if len(pool) >= size:
+                break
+            s = self._candidate()
+            key = canonical_key(s)
+            if key in keys or key in self._observed:
+                continue
+            keys.add(key)
+            pool.append(s)
+        return pool
+
+    # -- strategy protocol ---------------------------------------------
+    def propose(self, budget: int) -> list[Schedule]:
+        if budget <= 0:
+            return []
+        if self.surrogate.n_observations < self.warmup:
+            return [random_schedule(self.graph, self.n_streams, self.rng)
+                    for _ in range(budget)]
+        pool = self._pool(self.pool_factor * budget)
+        if len(pool) > budget:
+            preds = self.surrogate.predict(pool)
+            self.n_screened += len(pool)
+            top = np.argsort(preds, kind="stable")[:budget]
+            chosen = [pool[i] for i in top]
+            for i in top:
+                self._pending[canonical_key(pool[i])] = float(preds[i])
+        else:
+            chosen = pool  # space nearly exhausted: nothing to screen
+        while len(chosen) < budget:  # never starve the search loop
+            chosen.append(random_schedule(self.graph, self.n_streams,
+                                          self.rng))
+        return chosen
+
+    def observe(self, schedule: Schedule, time: float) -> None:
+        key = canonical_key(schedule)
+        pred = self._pending.pop(key, None)
+        if pred is not None:
+            self.screen_log.append((pred, float(time)))
+        if key in self._observed:
+            # Re-proposed duplicate: the memoized evaluator returned the
+            # same makespan, so training on it again only grows the
+            # basis/refit cost without adding information.
+            return
+        self._observed[key] = float(time)
+        self._elites.append((float(time), schedule))
+        self._elites.sort(key=lambda e: e[0])
+        n_elite = max(1, min(32, int(self.elite_frac
+                                     * len(self._observed))))
+        del self._elites[n_elite:]
+        self.surrogate.observe(schedule, time)
+
+    # -- reporting ------------------------------------------------------
+    def screening_quality(self) -> dict:
+        """Surrogate-vs-simulated accuracy over everything screened."""
+        if not self.screen_log:
+            return {"n_screened": self.n_screened, "n_compared": 0,
+                    "spearman": 0.0, "mean_rel_err": float("nan")}
+        pred, actual = map(np.asarray, zip(*self.screen_log))
+        rel = np.abs(pred - actual) / np.maximum(actual, 1e-30)
+        return {"n_screened": self.n_screened,
+                "n_compared": len(self.screen_log),
+                "spearman": spearman(pred, actual),
+                "mean_rel_err": float(rel.mean())}
+
+
+# -- the portfolio -----------------------------------------------------------
+
+class PortfolioSearch:
+    """Greedy seeding → MCTS refinement → surrogate exploitation.
+
+    One strategy-protocol object that spends its proposal stream in
+    three phases: ``seed_proposals`` epsilon-greedy constructions (fast
+    good anchors for the surrogate), ``mcts_proposals`` of the paper's
+    coverage-guided MCTS (diverse structure), then surrogate-guided
+    two-stage exploitation for the rest of the budget. Every
+    observation — whatever phase proposed it — feeds both the MCTS tree
+    (via path materialization) and the surrogate's training set, so the
+    exploitation phase starts from everything the earlier phases
+    learned.
+
+    Budget accounting caveat: the greedy phase scores candidate
+    extensions with *prefix* simulations of its own
+    (``GreedyCostModel.n_prefix_sims``), which the evaluator's
+    ``sim_budget`` meter does not see. For strict equal-simulation
+    comparisons (benchmarks/at_scale.py, the regression test), pass
+    ``seed_proposals=0``. The greedy phase also simulates under
+    ``machine`` — when the evaluator runs a non-default machine, pass
+    the same one here or the seeds will optimize the wrong objective.
+    """
+
+    def __init__(self, graph: Graph, n_streams: int,
+                 machine: Machine | None = None, seed: int = 0,
+                 seed_proposals: int = 16, mcts_proposals: int = 128,
+                 **surrogate_kwargs):
+        self.greedy = GreedyCostModel(graph, n_streams, machine=machine,
+                                      seed=seed)
+        self.mcts = MCTSSearch(graph, n_streams, seed=seed)
+        self.surrogate = SurrogateGuided(graph, n_streams, seed=seed,
+                                         **surrogate_kwargs)
+        self.seed_proposals = seed_proposals
+        self.mcts_proposals = mcts_proposals
+        self._n = 0
+
+    def propose(self, budget: int) -> list[Schedule]:
+        b1 = self.seed_proposals
+        b2 = self.seed_proposals + self.mcts_proposals
+        while True:
+            if self._n < b1:
+                batch = self.greedy.propose(min(budget, b1 - self._n))
+                if not batch:
+                    self._n = b1
+                    continue
+            elif self._n < b2:
+                batch = self.mcts.propose(min(budget, b2 - self._n))
+                if not batch:  # tiny space fully explored by MCTS
+                    self._n = b2
+                    continue
+            else:
+                batch = self.surrogate.propose(budget)
+            self._n += len(batch)
+            return batch
+
+    def observe(self, schedule: Schedule, time: float) -> None:
+        self.mcts.observe(schedule, time)
+        self.surrogate.observe(schedule, time)
+
+    def screening_quality(self) -> dict:
+        return self.surrogate.screening_quality()

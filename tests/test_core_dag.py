@@ -98,6 +98,40 @@ def test_sync_insertion_cpu_to_gpu_no_sync():
     assert "CES-b4-k1" not in names  # a->k1 is CPU->GPU: none
 
 
+def test_expanded_names_cache_invalidated_on_graph_mutation():
+    """Mutating a graph after its sync tables were cached must not
+    serve a stale expansion (Graph.version keys the cache)."""
+    g = C.Graph()
+    g.add_op(C.Op("k1", C.OpKind.GPU, duration=1e-6))
+    g.add_op(C.Op("k2", C.OpKind.GPU, duration=1e-6))
+    g.finalize()
+    s = C.Schedule((BoundOp("start"), BoundOp("k1", 0),
+                    BoundOp("k2", 1), BoundOp("end")))
+    C.expanded_names(g, s)  # warm the cache
+    g.add_edge("k1", "k2")  # now k1->k2 cross-stream needs a CSWE
+    names = C.expanded_names(g, s)
+    assert "CSWE-b4-k2" in names
+    assert names == [it.name for it in C.expand(g, s)]
+
+
+def test_expanded_names_matches_expand():
+    """The featurizer's fast names-only path must stay in lockstep with
+    the full Table III insertion in :func:`repro.core.sync.expand`."""
+    import random
+
+    import repro.search as S
+    from repro.core.dag import halo3d_dag, spmv_dag_fine
+
+    for g in (small_graph(), C.spmv_dag(), spmv_dag_fine(),
+              halo3d_dag()):
+        rng = random.Random(7)
+        for n_streams in (1, 2, 3):
+            for _ in range(10):
+                s = S.random_schedule(g, n_streams, rng)
+                assert C.expanded_names(g, s) == \
+                    [it.name for it in C.expand(g, s)]
+
+
 # -- enumeration ---------------------------------------------------------------
 
 def test_enumeration_count_and_validity():

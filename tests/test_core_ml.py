@@ -47,6 +47,35 @@ def test_step_convolve_peak_at_jump():
     assert np.argmax(c) in (49, 50)
 
 
+def test_step_convolve_matches_explicit_kernel():
+    """Lock the §IV-A kernel: -1 on [-r, 0] (r+1 taps), +1 on [1, r]
+    (r taps) — cross-checked against an explicit correlation and a
+    brute-force double sum (and scipy, when importable)."""
+    rng = np.random.default_rng(5)
+    a = np.sort(rng.random(100))
+    for r in (1, 3, 7):
+        ours = step_convolve(a, r)
+        kernel = np.array([-1.0] * (r + 1) + [1.0] * r)
+        ref = np.zeros_like(a)
+        ref[r:a.size - r] = np.correlate(a, kernel, mode="valid")
+        np.testing.assert_allclose(ours, ref, atol=1e-12)
+        for i in range(r, a.size - r):
+            want = a[i + 1:i + r + 1].sum() - a[i - r:i + 1].sum()
+            assert abs(ours[i] - want) < 1e-12
+        try:
+            import scipy.signal as sps
+        except ImportError:
+            continue
+        sref = np.zeros_like(a)
+        sref[r:a.size - r] = sps.correlate(a, kernel, mode="valid")
+        np.testing.assert_allclose(ours, sref, atol=1e-12)
+
+
+def test_step_convolve_too_short_is_zero():
+    # The kernel spans 2r+1 taps; anything shorter has no valid window.
+    assert (step_convolve(np.arange(6, dtype=float), 3) == 0).all()
+
+
 def test_find_peaks_matches_scipy():
     scipy_signal = pytest.importorskip("scipy.signal")
     rng = np.random.default_rng(3)
@@ -113,6 +142,34 @@ def test_featurize_like_consistent_basis(spmv_space):
     fm = C.featurize(g, scheds)
     X2 = C.featurize_like(g, scheds, fm)
     np.testing.assert_array_equal(fm.X, X2)
+
+
+def test_featurize_degenerate_corpus_raises(spmv_space):
+    """A corpus with <= 1 distinct schedule prunes every column; that
+    must be a nameable error, not a 0-feature matrix handed to the
+    tree fit."""
+    g, scheds = spmv_space
+    s = scheds[0]
+    for corpus in ([], [s], [s, s, s]):
+        with pytest.raises(C.DegenerateFeatureSpaceError,
+                           match="distinct"):
+            C.featurize(g, corpus)
+    # the guard is a ValueError subclass, so legacy handlers still work
+    assert issubclass(C.DegenerateFeatureSpaceError, ValueError)
+    # two distinct schedules are the minimum viable corpus
+    assert C.featurize(g, scheds[:2]).features
+
+
+def test_feature_basis_incremental_equals_batch(spmv_space):
+    """Absorbing the corpus in chunks must give the same basis/matrix
+    as one featurize call over everything."""
+    g, scheds = spmv_space
+    basis = C.FeatureBasis(g)
+    basis.add(scheds[:10]).add(scheds[10:75]).add(scheds[75:])
+    inc = basis.matrix()
+    ref = C.featurize(g, list(scheds))
+    assert inc.features == ref.features
+    np.testing.assert_array_equal(inc.X, ref.X)
 
 
 # -- decision tree --------------------------------------------------------------

@@ -1,0 +1,242 @@
+"""Two-stage surrogate search, the strategy portfolio, and the
+run_search budget/clamping semantics introduced alongside them."""
+import random
+
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.search as S
+from repro.core.dag import spmv_dag_fine
+
+
+# -- run_search clamps over-returning strategies ------------------------------
+
+class OverReturner:
+    """Deliberately ignores ``ask`` and returns 10x as many proposals."""
+
+    def __init__(self, graph, n_streams=2, seed=0):
+        self.inner = S.RandomSearch(graph, n_streams, seed=seed)
+        self.observed = 0
+
+    def propose(self, budget):
+        return self.inner.propose(10 * budget)
+
+    def observe(self, schedule, time):
+        self.observed += 1
+
+
+def test_run_search_clamps_over_returning_strategy():
+    g = C.spmv_dag()
+    strat = OverReturner(g)
+    res = S.run_search(g, strat, budget=30, batch_size=8)
+    # Without the clamp the first propose(8) alone would push
+    # n_proposed to 80 and evaluate the excess.
+    assert res.n_proposed == 30
+    assert strat.observed == 30
+    assert res.cache_hits + res.cache_misses == 30
+
+
+def test_run_search_clamp_exact_final_batch():
+    g = C.spmv_dag()
+    res = S.run_search(g, OverReturner(g), budget=7, batch_size=64)
+    assert res.n_proposed == 7
+
+
+# -- sim_budget: stop on simulations, not proposals ---------------------------
+
+def test_run_search_sim_budget_counts_cache_misses():
+    g = C.spmv_dag()
+    res = S.run_search(g, S.RandomSearch(g, 2, seed=0), budget=None,
+                       sim_budget=25, batch_size=1)
+    assert res.cache_misses == 25
+    # random search re-proposes duplicates: those were free (memo hits)
+    assert res.n_proposed >= 25
+
+
+def test_run_search_sim_budget_terminates_on_exhausted_space():
+    """sim_budget larger than the space + a never-exhausting strategy
+    (portfolio pads batches with duplicates) must stop via the stall
+    guard instead of spinning forever."""
+    g = C.spmv_dag()  # 280 distinct implementations with 2 streams
+    res = S.run_search(g, S.PortfolioSearch(g, 2, seed=0), budget=None,
+                       sim_budget=330, batch_size=1, stall_limit=400)
+    assert res.cache_misses == 280  # every implementation simulated
+    assert len(res.schedules) == 280
+
+
+def test_run_search_unbounded_budget_terminates_via_stall_guard():
+    """budget=None alone (no sim_budget) with a never-exhausting
+    strategy must also terminate once the space is exhausted."""
+    g = C.spmv_dag()
+    res = S.run_search(g, S.PortfolioSearch(g, 2, seed=0), budget=None,
+                       batch_size=1, stall_limit=400)
+    assert res.cache_misses == 280
+    assert len(res.schedules) == 280
+
+
+def test_run_search_sim_budget_with_shared_evaluator():
+    g = C.spmv_dag()
+    ev = S.BatchEvaluator(g)
+    S.run_search(g, S.RandomSearch(g, 2, seed=0), budget=None,
+                 sim_budget=10, batch_size=1, evaluator=ev)
+    # the second run's budget counts only its own fresh simulations
+    res2 = S.run_search(g, S.RandomSearch(g, 2, seed=1), budget=None,
+                        sim_budget=10, batch_size=1, evaluator=ev)
+    assert res2.cache_misses == 10
+
+
+# -- the ridge surrogate ------------------------------------------------------
+
+def test_surrogate_rank_correlation_held_out():
+    """Screening quality floor: Spearman > 0.8 on held-out simulated
+    times for a model trained on 300 random SpMV schedules."""
+    g = C.spmv_dag()
+    rng = random.Random(0)
+    train = [S.random_schedule(g, 2, rng) for _ in range(300)]
+    held_out = [S.random_schedule(g, 2, rng) for _ in range(200)]
+    ev = S.BatchEvaluator(g)
+    sur = S.RidgeSurrogate(g)
+    for s, t in zip(train, ev.evaluate(train)):
+        sur.observe(s, t)
+    rho = S.spearman(sur.predict(held_out),
+                     np.array(ev.evaluate(held_out)))
+    assert rho > 0.8, rho
+
+
+def test_surrogate_predicts_mean_when_degenerate():
+    g = C.spmv_dag()
+    sur = S.RidgeSurrogate(g, refit_every=1)
+    s = S.random_schedule(g, 2, random.Random(0))
+    assert sur.predict([s]) == pytest.approx([0.0])  # no data: mean 0
+    sur.observe(s, 3.0)
+    sur.observe(s, 5.0)  # identical schedules: no features survive
+    np.testing.assert_allclose(sur.predict([s]), [4.0])
+
+
+def test_spearman_basics():
+    assert S.spearman([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+    assert S.spearman([1, 2, 3], [3, 2, 1]) == pytest.approx(-1.0)
+    assert S.spearman([1, 1, 1], [1, 2, 3]) == 0.0  # degenerate
+    # ties get average ranks (scipy convention)
+    a, b = [1.0, 2.0, 2.0, 3.0], [1.0, 2.5, 2.5, 4.0]
+    assert S.spearman(a, b) == pytest.approx(1.0)
+
+
+# -- the two-stage strategy ---------------------------------------------------
+
+def test_surrogate_guided_valid_canonical_and_screens():
+    g = spmv_dag_fine()
+    strat = S.SurrogateGuided(g, 2, seed=0, warmup=20)
+    res = S.run_search(g, strat, budget=120, batch_size=4)
+    assert res.n_proposed == 120
+    for s in res.schedules:
+        C.validate_schedule(g, s)
+        assert C.canonicalize_streams(s.items) == s.items
+    q = strat.screening_quality()
+    assert q["n_screened"] > 0
+    assert q["n_compared"] > 0
+    # every screened->simulated pair was logged with its prediction
+    assert len(strat.screen_log) == q["n_compared"]
+
+
+def test_portfolio_beats_plain_mcts_at_equal_sim_budget():
+    """The acceptance bar: on spmv_dag_fine with an equal
+    discrete-event-simulation budget the portfolio's best makespan is
+    <= plain MCTS's best, with >= 5 surrogate-screened candidates per
+    simulation spent."""
+    g = spmv_dag_fine()
+    sims = 300
+    res_m = S.run_search(g, S.MCTSSearch(g, 2, seed=0), budget=None,
+                         sim_budget=sims, batch_size=1)
+    # seed_proposals=0 so the greedy phase's unmetered prefix
+    # simulations can't subsidize the portfolio
+    port = S.PortfolioSearch(g, 2, seed=0, seed_proposals=0)
+    res_p = S.run_search(g, port, budget=None, sim_budget=sims,
+                         batch_size=1)
+    assert port.greedy.n_prefix_sims == 0
+    assert res_p.cache_misses == res_m.cache_misses == sims
+    assert res_p.best()[1] <= res_m.best()[1]
+    q = port.screening_quality()
+    assert q["n_screened"] / sims >= 5.0
+
+
+def test_portfolio_observations_reach_all_phases():
+    g = C.spmv_dag()
+    port = S.PortfolioSearch(g, 2, seed=0, seed_proposals=4,
+                             mcts_proposals=8, warmup=12)
+    res = S.run_search(g, port, budget=40)
+    assert res.n_proposed == 40
+    # every observation fed the MCTS tree; the surrogate trains on each
+    # distinct schedule once (duplicates carry no new information)
+    assert port.mcts.root.n_rollouts == 40
+    assert port.surrogate.surrogate.n_observations == len(res.schedules)
+
+
+def test_portfolio_survives_exhausted_space():
+    """On a tiny space MCTS exhausts mid-portfolio; the portfolio must
+    hand over to the surrogate phase instead of ending the search."""
+    g = C.Graph()
+    g.add_op(C.Op("k1", C.OpKind.GPU, duration=2e-6))
+    g.add_op(C.Op("k2", C.OpKind.GPU, duration=3e-6))
+    g.add_edge("k1", "k2")
+    g.finalize()
+    n_space = len(list(C.enumerate_schedules(g, 2)))
+    port = S.PortfolioSearch(g, 2, seed=0, seed_proposals=2,
+                             mcts_proposals=10**6, warmup=4)
+    res = S.run_search(g, port, budget=50)
+    assert res.n_proposed == 50  # surrogate random-fills past exhaustion
+    assert len(res.schedules) == n_space
+
+
+# -- vectorized featurizer vs the removed loop path ---------------------------
+
+def test_featurize_bit_identical_to_loop_reference():
+    from benchmarks.featurize_bench import featurize_loop_reference
+
+    g = C.spmv_dag()
+    scheds = list(C.enumerate_schedules(g, 2))
+    fm_loop = featurize_loop_reference(g, scheds)
+    fm_vec = C.featurize(g, scheds)
+    assert fm_loop.features == fm_vec.features
+    assert fm_vec.X.dtype == np.int8
+    np.testing.assert_array_equal(fm_loop.X, fm_vec.X)
+
+
+def test_featurize_bit_identical_on_fine_corpus():
+    from benchmarks.featurize_bench import featurize_loop_reference
+
+    g = spmv_dag_fine()
+    rng = random.Random(3)
+    scheds = [S.random_schedule(g, 3, rng) for _ in range(150)]
+    fm_loop = featurize_loop_reference(g, scheds)
+    fm_vec = C.featurize(g, scheds)
+    assert fm_loop.features == fm_vec.features
+    np.testing.assert_array_equal(fm_loop.X, fm_vec.X)
+
+
+def test_featurize_like_reference_basis_round_trip():
+    """A reference basis applied to its own training set reproduces
+    FeatureMatrix.X; applied to unseen schedules it matches the loop
+    semantics (absent items -> 0)."""
+    g = spmv_dag_fine()
+    rng = random.Random(4)
+    train = [S.random_schedule(g, 2, rng) for _ in range(60)]
+    unseen = [S.random_schedule(g, 2, rng) for _ in range(40)]
+    fm = C.featurize(g, train)
+    np.testing.assert_array_equal(
+        C.featurize_like(g, train, fm), fm.X)
+
+    X_unseen = C.featurize_like(g, unseen, fm)
+    assert X_unseen.shape == (len(unseen), len(fm.features))
+    for i, s in enumerate(unseen[:10]):
+        names = C.expanded_names(g, s)
+        pos = {n: k for k, n in enumerate(names)}
+        streams = s.streams()
+        for j, f in enumerate(fm.features):
+            if f.kind == "order":
+                pu, pv = pos.get(f.u), pos.get(f.v)
+                want = int(pu is not None and pv is not None and pu < pv)
+            else:
+                want = int(streams.get(f.u) == streams.get(f.v))
+            assert X_unseen[i, j] == want
