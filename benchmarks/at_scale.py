@@ -4,9 +4,10 @@
 beyond exhaustive enumeration; here the greedy→MCTS→surrogate
 portfolio races plain MCTS under an *equal discrete-event-simulation
 budget* (``run_search(sim_budget=...)``, batch_size=1 for an exact
-cap). Rows report best makespans, the portfolio-vs-MCTS ratio, and the
+cap). Rows report best makespans, the portfolio-vs-MCTS ratio, the
 surrogate's screening quality (candidates screened per simulation
-spent, Spearman rank correlation of predicted vs simulated times).
+spent, Spearman rank correlation of predicted vs simulated times), and
+the portfolio evaluator's ``stats()`` cache-traffic summary.
 """
 from __future__ import annotations
 
@@ -25,15 +26,22 @@ def _race(name: str, graph, sim_budget: int, seed: int = 0) -> list[str]:
     # seed_proposals=0: greedy seeding pays prefix simulations the
     # sim_budget meter cannot see, which would make the race unfair.
     port = S.PortfolioSearch(graph, 2, seed=seed, seed_proposals=0)
+    ev_p = S.make_evaluator(graph, "sim")
     t0 = time.perf_counter()
     res_p = S.run_search(graph, port, budget=None,
-                         sim_budget=sim_budget, batch_size=1)
+                         sim_budget=sim_budget, batch_size=1,
+                         evaluator=ev_p)
     wall_p = (time.perf_counter() - t0) / max(1, res_p.cache_misses) * 1e6
 
     best_m, best_p = res_m.best()[1], res_p.best()[1]
     q = port.screening_quality()
     screened_per_sim = q["n_screened"] / max(1, res_p.cache_misses)
+    st = ev_p.stats()
     return [
+        f"at_scale_{name}_evaluator,{wall_p:.2f},"
+        f"backend={st['backend']}/hits={st['hits']}/"
+        f"misses={st['misses']}/size={st['size']}/"
+        f"hit_rate={st['hit_rate']:.2f}",
         f"at_scale_{name}_sims,{wall_p:.2f},"
         f"{res_p.cache_misses}_of_{sim_budget}",
         f"at_scale_{name}_mcts_best_us,{wall_m:.2f},{best_m * 1e6:.2f}",

@@ -1,12 +1,12 @@
 """Benchmark harness — one function per paper table/figure, plus kernel,
-substrate, featurization, and at-scale search benches.
+substrate, featurization, evaluation-engine, and at-scale search benches.
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
 writes the same rows as machine-readable JSON
 (``[{"name":..., "us_per_call":..., "derived":...}, ...]``) so the
 perf trajectory can accumulate across PRs, e.g.::
 
-    PYTHONPATH=src python benchmarks/run.py --json BENCH_2.json
+    PYTHONPATH=src python benchmarks/run.py --json BENCH_3.json
 """
 from __future__ import annotations
 
@@ -20,6 +20,7 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.at_scale import at_scale_benches
+from benchmarks.engine_bench import engine_benches
 from benchmarks.featurize_bench import featurize_benches
 from benchmarks.kernels_bench import (kernel_benches, model_benches,
                                       search_eval_benches)
@@ -30,8 +31,9 @@ from benchmarks.paper import (fig1_spread, fig4_labels, fig5_tree,
 
 BENCH_FNS = (fig1_spread, fig4_labels, fig5_tree, table5_accuracy,
              tables678_rules, stepdag_overlap, granularity_ablation,
-             noise_robustness, featurize_benches, at_scale_benches,
-             search_eval_benches, kernel_benches, model_benches)
+             noise_robustness, featurize_benches, engine_benches,
+             at_scale_benches, search_eval_benches, kernel_benches,
+             model_benches)
 
 
 def parse_row(row: str) -> dict:

@@ -6,6 +6,11 @@ the SpMV DAG with a small MCTS budget. Used two ways:
   * ``PYTHONPATH=src python benchmarks/smoke.py`` prints the summary;
   * ``pytest -m smoke`` runs it as a marked test
     (tests/test_smoke.py), so CI can gate on the hot path cheaply.
+
+:func:`run_backend_smoke` additionally drives a small search through
+*every* registered evaluation backend (pool with 2 workers, wallclock
+on the tiny CPU demo impls), so the smoke gate keeps all engine
+backends honest, not just the default serial one.
 """
 from __future__ import annotations
 
@@ -15,11 +20,14 @@ import repro.core as C
 import repro.search as S
 
 
-def run_smoke(budget: int = 200, seed: int = 0) -> dict:
+def run_smoke(budget: int = 200, seed: int = 0,
+              backend: str | None = None,
+              backend_kwargs: dict | None = None) -> dict:
     """One end-to-end search->rules pass; returns a summary dict."""
     t0 = time.perf_counter()
     g = C.spmv_dag()
-    res = S.run_search(g, S.MCTSSearch(g, 2, seed=seed), budget=budget)
+    res = S.run_search(g, S.MCTSSearch(g, 2, seed=seed), budget=budget,
+                       backend=backend, backend_kwargs=backend_kwargs)
     fm, lab, times = res.dataset()
     tree = C.algorithm1(fm.X, lab.labels)
     rulesets = C.extract_rulesets(tree, fm.features)
@@ -40,10 +48,61 @@ def run_smoke(budget: int = 200, seed: int = 0) -> dict:
     }
 
 
+def run_backend_smoke(budget: int = 48, seed: int = 0) -> dict:
+    """A small search through every evaluation backend.
+
+    Analytic backends (sim / vectorized / pool-with-2-workers) must
+    return byte-identical (times, cache counters); wallclock runs the
+    jitted executor on tiny demo impls with its value-correctness gate
+    on. Returns {backend: summary} with the identity verdict under
+    ``"analytic_identical"``.
+    """
+    import repro.engine as E
+
+    g = C.spmv_dag()
+    out: dict = {}
+    results = {}
+    for backend, kwargs in (("sim", {}), ("vectorized", {}),
+                            ("pool", {"n_workers": 2, "min_shard": 1})):
+        t0 = time.perf_counter()
+        res = S.run_search(g, S.MCTSSearch(g, 2, seed=seed),
+                           budget=budget, batch_size=8,
+                           backend=backend, backend_kwargs=kwargs)
+        results[backend] = res
+        out[backend] = {
+            "n_schedules": len(res.schedules),
+            "cache_misses": res.cache_misses,
+            "best_us": res.best()[1] * 1e6,
+            "wall_s": time.perf_counter() - t0,
+        }
+    out["analytic_identical"] = all(
+        results[b].times == results["sim"].times
+        and results[b].cache_misses == results["sim"].cache_misses
+        for b in ("vectorized", "pool"))
+
+    small = C.spmv_dag(rows_per_rank=32, nnz_per_rank=128)
+    impls, env = E.demo_spmv_impls(small, n=8)
+    t0 = time.perf_counter()
+    res = S.run_search(small, S.MCTSSearch(small, 2, seed=seed),
+                       budget=min(budget, 10),
+                       backend="wallclock",
+                       backend_kwargs=dict(impls=impls, env=env,
+                                           repeats=3))
+    out["wallclock"] = {
+        "n_schedules": len(res.schedules),
+        "cache_misses": res.cache_misses,
+        "best_us": res.best()[1] * 1e6,
+        "wall_s": time.perf_counter() - t0,
+    }
+    return out
+
+
 def main() -> None:
     out = run_smoke()
     for k, v in out.items():
         print(f"smoke_{k}: {v}")
+    for backend, v in run_backend_smoke().items():
+        print(f"smoke_backend_{backend}: {v}")
 
 
 if __name__ == "__main__":

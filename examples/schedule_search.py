@@ -12,7 +12,7 @@ output, for a 2026 workload.
 
 Usage: PYTHONPATH=src python examples/schedule_search.py
            [--arch qwen2.5-32b] [--layers 4] [--iters 600]
-           [--strategy portfolio|mcts]
+           [--strategy portfolio|mcts] [--backend sim|vectorized|pool]
 """
 import argparse
 
@@ -49,7 +49,21 @@ def main() -> None:
                     default="portfolio",
                     help="portfolio = greedy seeding + MCTS refinement "
                          "+ surrogate-screened exploitation")
+    ap.add_argument("--backend", choices=("sim", "vectorized", "pool"),
+                    default="sim",
+                    help="evaluation engine (repro.engine registry); "
+                         "all analytic backends are bit-identical — "
+                         "this is a pure throughput choice (wallclock "
+                         "additionally needs op impls; see "
+                         "src/repro/engine/README.md)")
+    ap.add_argument("--batch-size", type=int, default=None,
+                    help="schedules per propose() call; default 1 for "
+                         "the sim backend (the paper's strictly "
+                         "sequential loop) and 32 for vectorized/pool, "
+                         "which only amortize across batches")
     args = ap.parse_args()
+    if args.batch_size is None:
+        args.batch_size = 1 if args.backend == "sim" else 32
 
     costs = costs_from_arch(args.arch, args.layers,
                             tokens_per_chip=16 * 4096 // 16)
@@ -62,7 +76,8 @@ def main() -> None:
         strategy = S.PortfolioSearch(graph, args.channels, seed=0)
     else:
         strategy = S.MCTSSearch(graph, args.channels, seed=0)
-    res = S.run_search(graph, strategy, budget=args.iters)
+    res = S.run_search(graph, strategy, budget=args.iters,
+                       backend=args.backend, batch_size=args.batch_size)
     times = res.times_array()
     best, best_t = res.best()
     print(f"explored {len(res.schedules)} schedules "

@@ -30,6 +30,7 @@ def measure(fn: Callable[[], object], t_measure_s: float = T_MEASURE_S,
 
 
 # Measurement-noise injection for labeling-robustness studies lives in
-# repro.search.evaluator.BatchEvaluator (noise_sigma=...): noise is
-# drawn per evaluation, after the memo cache, matching how re-running a
-# real benchmark behaves.
+# the evaluation engine (repro.engine, noise_sigma=...): noise is drawn
+# per evaluation, after the memo cache — seeded per (canonical key,
+# draw index), so it is independent of batch order and backend —
+# matching how re-running a real benchmark behaves.

@@ -58,7 +58,7 @@ def op_durations(graph: Graph, machine: Machine | None = None
     """Duration of every DAG op under ``machine``.
 
     Schedule-independent, so batched evaluation
-    (:class:`repro.search.evaluator.BatchEvaluator`) computes this once
+    (:class:`repro.engine.base.BatchEvaluator` and friends) computes this once
     and passes it to :func:`simulate` for every schedule in the batch.
     The expressions mirror the per-op fallback inside :func:`simulate`
     exactly, keeping batched results bit-identical to unbatched ones.

@@ -21,17 +21,19 @@ wall-clock objective for MCTS.
 """
 from __future__ import annotations
 
-from typing import Callable, Mapping
-
-import jax
-import jax.numpy as jnp
-from jax import lax
+from typing import Any, Callable, Mapping
 
 from repro.core.dag import Graph, OpKind, Schedule
 from repro.core.sync import expand
 
+# JAX is imported lazily inside the builders: this module is pulled in
+# by ``repro.core``'s package init, and evaluation-engine worker
+# processes (repro/engine/pool.py, forkserver/spawn start methods) must
+# be able to import the package without paying — or multithreading
+# themselves with — the JAX runtime they never use.
+
 # An op implementation: (env, token) -> (outputs dict, token).
-OpImpl = Callable[[dict, jax.Array], tuple[dict, jax.Array]]
+OpImpl = Callable[[dict, Any], tuple[dict, Any]]
 
 
 def op_impl(fn: Callable, inputs: list[str], outputs: list[str]) -> OpImpl:
@@ -39,8 +41,9 @@ def op_impl(fn: Callable, inputs: list[str], outputs: list[str]) -> OpImpl:
 
     ``fn(*input_values) -> tuple(output_values)`` (or a single array).
     """
+    from jax import lax
 
-    def impl(env: dict, tok: jax.Array) -> tuple[dict, jax.Array]:
+    def impl(env: dict, tok):
         vals = [env[k] for k in inputs]
         if vals:
             *vals, tok = lax.optimization_barrier((*vals, tok))
@@ -53,7 +56,8 @@ def op_impl(fn: Callable, inputs: list[str], outputs: list[str]) -> OpImpl:
     return impl
 
 
-def _join(*toks: jax.Array) -> jax.Array:
+def _join(*toks):
+    from jax import lax
     out = toks[0]
     for t in toks[1:]:
         out, _ = lax.optimization_barrier((out, t))
@@ -63,14 +67,15 @@ def _join(*toks: jax.Array) -> jax.Array:
 def build_runner(graph: Graph, schedule: Schedule,
                  impls: Mapping[str, OpImpl]) -> Callable[[dict], dict]:
     """Return ``run(env) -> env`` executing the expanded schedule."""
+    import jax.numpy as jnp
     items = expand(graph, schedule)
 
     def run(env: dict) -> dict:
         env = dict(env)
         zero = jnp.zeros((), jnp.float32)
         cpu_tok = zero
-        stream_tok: dict[int, jax.Array] = {}
-        event_tok: dict[str, jax.Array] = {}
+        stream_tok: dict = {}
+        event_tok: dict = {}
         for it in items:
             if it.kind == "CER":
                 event_tok[it.anchor] = stream_tok.get(it.stream, zero)
@@ -101,4 +106,5 @@ def build_runner(graph: Graph, schedule: Schedule,
 
 def jit_runner(graph: Graph, schedule: Schedule,
                impls: Mapping[str, OpImpl]):
+    import jax
     return jax.jit(build_runner(graph, schedule, impls))

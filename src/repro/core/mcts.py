@@ -18,16 +18,25 @@ import dataclasses
 from typing import Callable
 
 from repro.core.dag import Graph, Schedule
-from repro.search.mcts import EXPLORATION_C, MCTSSearch, Node
 
 __all__ = ["EXPLORATION_C", "MCTS", "MCTSResult", "Node"]
+
+
+def __getattr__(name: str):
+    # EXPLORATION_C / Node re-export lazily: importing repro.search at
+    # module load would cycle (core -> search -> engine -> core) now
+    # that the evaluation engine lives outside repro.search.
+    if name in ("EXPLORATION_C", "Node"):
+        import repro.search.mcts as _m
+        return getattr(_m, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass
 class MCTSResult:
     schedules: list[Schedule]
     times: list[float]
-    root: Node
+    root: "Node"
 
 
 class MCTS:
@@ -36,6 +45,7 @@ class MCTS:
     def __init__(self, graph: Graph, n_streams: int,
                  objective: Callable[[Schedule], float],
                  seed: int = 0):
+        from repro.search.mcts import MCTSSearch
         self.graph = graph
         self.n_streams = n_streams
         self.objective = objective

@@ -1,0 +1,78 @@
+"""Pluggable evaluation engine: one contract, four backends.
+
+Evaluation is the bottleneck resource of the whole pipeline — MCTS and
+the surrogate portfolio explore thousands of schedules, and every
+makespan historically came from one serial Python discrete-event loop.
+This package makes evaluation the fast, swappable part: every backend
+subclasses :class:`~repro.engine.base.EvaluatorBase` (shared memo
+cache, hit/miss budget meters, order-independent noise) and is selected
+by name through :func:`make_evaluator`::
+
+    ev = make_evaluator(graph, backend="vectorized")
+    run_search(graph, strategy, backend="pool",
+               backend_kwargs={"n_workers": 4})
+
+Backends (see README.md in this package for the full matrix):
+
+  ``sim``         the serial reference: one discrete-event simulation
+                  per canonical-unique schedule.
+  ``vectorized``  numpy batch simulator — bit-identical to ``sim``,
+                  evaluates a whole miss batch with array ops.
+  ``pool``        ``sim``'s math sharded over a process pool; cache and
+                  accounting stay in the parent, results byte-identical.
+  ``wallclock``   the jitted token-chain executor (median-of-k real
+                  measurements + value-correctness gate).
+"""
+from __future__ import annotations
+
+from repro.core.costmodel import Machine
+from repro.core.dag import Graph
+from repro.engine.base import BatchEvaluator, EvaluatorBase, canonical_key
+from repro.engine.pool import PoolEvaluator
+from repro.engine.vectorized import (GraphTables, VectorizedEvaluator,
+                                     simulate_batch, simulate_encoded)
+from repro.engine.wallclock import (ExecutorEvaluator, demo_spmv_impls,
+                                    reference_schedule)
+
+BACKENDS: dict[str, type[EvaluatorBase]] = {
+    "sim": BatchEvaluator,
+    "vectorized": VectorizedEvaluator,
+    "pool": PoolEvaluator,
+    "wallclock": ExecutorEvaluator,
+}
+
+
+def register_backend(name: str, cls: type[EvaluatorBase]) -> None:
+    """Add (or replace) an evaluation backend under ``name``."""
+    if not (isinstance(cls, type) and issubclass(cls, EvaluatorBase)):
+        raise TypeError(f"{cls!r} is not an EvaluatorBase subclass")
+    BACKENDS[name] = cls
+
+
+def make_evaluator(graph: Graph, backend: str = "sim", *,
+                   machine: Machine | None = None,
+                   **kwargs) -> EvaluatorBase:
+    """Construct the named evaluation backend for ``graph``.
+
+    ``kwargs`` are backend-specific (``n_workers`` for ``pool``;
+    ``impls``/``env``/``repeats`` for ``wallclock``; ``noise_sigma`` /
+    ``noise_seed`` everywhere).
+    """
+    try:
+        cls = BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown evaluation backend {backend!r}; available: "
+            f"{sorted(BACKENDS)}") from None
+    return cls(graph, machine=machine, **kwargs)
+
+
+__all__ = [
+    "BACKENDS", "make_evaluator", "register_backend",
+    "EvaluatorBase", "BatchEvaluator", "canonical_key",
+    "VectorizedEvaluator", "GraphTables", "simulate_batch",
+    "simulate_encoded",
+    "PoolEvaluator",
+    "ExecutorEvaluator", "demo_spmv_impls", "reference_schedule",
+    "Machine",
+]

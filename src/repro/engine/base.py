@@ -1,0 +1,257 @@
+"""The evaluator contract: shared memo-cache / noise / budget layer.
+
+Every evaluation backend — serial discrete-event simulation, the numpy
+batch simulator, the process pool, the wall-clock executor — subclasses
+:class:`EvaluatorBase` and implements exactly one hook::
+
+    _measure_batch(schedules) -> list[float]
+
+called only with *canonical-unique cache misses*, in first-appearance
+order. Everything search-visible lives in the base class and is
+therefore identical across backends:
+
+  * the transposition/memo cache keyed on the canonical schedule hash
+    (stream-bijection normal form, §III-C2) — each distinct
+    implementation is measured exactly once;
+  * ``cache_hits`` / ``cache_misses`` accounting — the meter behind
+    ``run_search(sim_budget=N)``, so equal-simulation comparisons mean
+    the same thing no matter which backend ran them;
+  * measurement noise: with ``noise_sigma`` set, every evaluation draws
+    multiplicative Gaussian jitter seeded per **(canonical key, draw
+    index)** — *not* from one shared RNG stream — so noisy results are
+    a function of what was evaluated, never of batch order, worker
+    sharding, or vectorization. The j-th evaluation of a given
+    implementation returns the same noisy value on every backend.
+
+The serial reference backend (:class:`BatchEvaluator`, registry name
+``"sim"``) lives here too: it is the behavior every other backend is
+bit-locked against (see tests/test_batch_evaluator.py and
+tests/test_engine_vectorized.py).
+"""
+from __future__ import annotations
+
+import hashlib
+import random
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.costmodel import Machine, op_durations, simulate
+from repro.core.dag import Graph, Schedule
+
+
+def canonical_key(schedule: Schedule) -> tuple:
+    """Hashable identity under stream relabeling (transposition key).
+
+    Inlines :func:`~repro.core.dag.canonicalize_streams`' first-use
+    relabeling without building intermediate ``BoundOp`` objects. The
+    evaluator hot path does NOT go through here — it derives the same
+    identity for a whole batch at once in
+    :meth:`EvaluatorBase._encode_batch` (whose relabel must stay
+    equivalent to this one; the bijection-awareness tests lock both).
+    This function is the per-schedule form for everyone else: surrogate
+    pool dedup, benchmarks, tests.
+    """
+    mapping: dict[int, int] = {}
+    out = []
+    for it in schedule.items:
+        s = it.stream
+        if s is None:
+            out.append((it.name, None))
+        else:
+            c = mapping.get(s)
+            if c is None:
+                c = mapping[s] = len(mapping)
+            out.append((it.name, c))
+    return tuple(out)
+
+
+def _noise_gauss(noise_seed: int, key: bytes, draw: int) -> float:
+    """A standard-normal draw seeded purely by what is being evaluated.
+
+    ``repr`` of a canonical cache key (bytes) is deterministic, and
+    blake2b is stable across processes and ``PYTHONHASHSEED`` values —
+    so pooled, vectorized, and permuted evaluation all see the
+    identical noise for the j-th draw of a given implementation.
+    """
+    payload = repr((noise_seed, key, draw)).encode()
+    seed = int.from_bytes(
+        hashlib.blake2b(payload, digest_size=8).digest(), "big")
+    return random.Random(seed).gauss(0.0, 1.0)
+
+
+class EvaluatorBase:
+    """Batched, memoized schedule evaluation (backend-agnostic layer)."""
+
+    backend = "abstract"
+
+    def __init__(self, graph: Graph, machine: Machine | None = None,
+                 noise_sigma: float = 0.0, noise_seed: int = 0):
+        self.graph = graph
+        self.machine = machine or Machine()
+        self.noise_sigma = noise_sigma
+        self.noise_seed = noise_seed
+        self._noise_draws: dict[bytes, int] = {}
+        self._durations = op_durations(graph, self.machine)
+        self._op_id = {n: i for i, n in enumerate(graph.ops)}
+        self._cache: dict[bytes, float] = {}
+        self.cache_hits = 0
+        self.cache_misses = 0
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def stats(self) -> dict:
+        """Cache traffic summary: {backend, hits, misses, size, hit_rate}."""
+        total = self.cache_hits + self.cache_misses
+        return {
+            "backend": self.backend,
+            "hits": self.cache_hits,
+            "misses": self.cache_misses,
+            "size": len(self._cache),
+            "hit_rate": self.cache_hits / total if total else 0.0,
+        }
+
+    # -- the backend hook --------------------------------------------------
+    def _measure_batch(self, schedules: Sequence[Schedule],
+                       encoded: np.ndarray | None = None) -> list[float]:
+        """Measure canonical-unique cache misses (one time per schedule).
+
+        Called with distinct implementations only, in first-appearance
+        order; must return one float per input, in order. ``encoded``
+        is the matching ``(K, 2, N)`` int32 canonical encoding rows
+        from :meth:`_encode_batch` — backends that simulate in array
+        form use it to skip re-encoding; others ignore it.
+        """
+        raise NotImplementedError
+
+    # -- canonical encoding -------------------------------------------------
+    def _encode_batch(self, schedules: Sequence[Schedule]
+                      ) -> tuple[list[bytes], np.ndarray]:
+        """(keys, encoding) for a batch of complete schedules.
+
+        The encoding is ``(B, 2, N)`` int32: ``enc[b, 0]`` the op id
+        per position, ``enc[b, 1]`` the *canonical* (first-use-
+        relabeled, §III-C2) stream per position, -1 for CPU ops; each
+        row's bytes are the schedule's cache key — the same identity
+        :func:`canonical_key` computes, in a form the whole batch
+        shares with the array backends. The first-use relabel is itself
+        vectorized (first-occurrence position per stream,
+        stable-argsorted into ranks).
+        """
+        op_id = self._op_id
+        n = len(op_id)
+        b_n = len(schedules)
+        ids: list[int] = []
+        sts: list[int] = []
+        ext_i, ext_s = ids.extend, sts.extend
+        for sched in schedules:
+            items = sched.items
+            if len(items) != n:
+                raise ValueError(
+                    f"evaluators require complete schedules: got "
+                    f"{len(items)} items for a {n}-op graph")
+            ext_i([op_id[i.name] for i in items])
+            ext_s([-1 if i.stream is None else i.stream for i in items])
+        enc = np.empty((b_n, 2, n), dtype=np.int32)
+        enc[:, 0, :] = np.fromiter(ids, np.int32,
+                                   count=b_n * n).reshape(b_n, n)
+        enc[:, 1, :] = np.fromiter(sts, np.int32,
+                                   count=b_n * n).reshape(b_n, n)
+        streams = enc[:, 1, :]
+        s_max = int(streams.max()) if streams.size else -1
+        if s_max >= 0:
+            n_streams = s_max + 1
+            pos = np.arange(n, dtype=np.int32)
+            first = np.where(
+                streams[:, :, None] == np.arange(n_streams,
+                                                 dtype=np.int32),
+                pos[None, :, None], n).min(axis=1)      # (B, S)
+            by_first = np.argsort(first, axis=1, kind="stable")
+            label = np.empty_like(by_first)
+            np.put_along_axis(
+                label, by_first,
+                np.arange(n_streams)[None, :], axis=1)
+            row_base = (np.arange(b_n) * n_streams)[:, None]
+            enc[:, 1, :] = np.where(
+                streams >= 0,
+                label.ravel()[row_base + np.maximum(streams, 0)],
+                -1)
+        return [row.tobytes() for row in enc], enc
+
+    # -- the shared evaluation path ----------------------------------------
+    def _noisy(self, key: bytes, t: float) -> float:
+        if not self.noise_sigma:
+            return t
+        draw = self._noise_draws.get(key, 0)
+        self._noise_draws[key] = draw + 1
+        g = _noise_gauss(self.noise_seed, key, draw)
+        return t * max(0.1, 1.0 + self.noise_sigma * g)
+
+    def evaluate_keyed(self, schedules: Sequence[Schedule]
+                       ) -> list[tuple[bytes, float]]:
+        """(canonical key, time) per schedule, in order; one measurement
+        per distinct canonical schedule across the evaluator's lifetime.
+        The key is returned so callers that also need an identity under
+        stream relabeling (run_search dedup) don't re-canonicalize."""
+        if not schedules:
+            return []
+        keys, encoded = self._encode_batch(schedules)
+        miss_keys: list[bytes] = []
+        miss_rows: list[int] = []
+        pending: set[bytes] = set()
+        for b, key in enumerate(keys):
+            if key not in self._cache and key not in pending:
+                pending.add(key)
+                miss_keys.append(key)
+                miss_rows.append(b)
+        if miss_rows:
+            miss_scheds = [schedules[b] for b in miss_rows]
+            measured = self._measure_batch(miss_scheds,
+                                           encoded[miss_rows])
+            if len(measured) != len(miss_scheds):
+                raise RuntimeError(
+                    f"{type(self).__name__}._measure_batch returned "
+                    f"{len(measured)} results for {len(miss_scheds)} "
+                    "schedules")
+            for key, t in zip(miss_keys, measured):
+                self._cache[key] = float(t)
+
+        out: list[tuple[bytes, float]] = []
+        for key in keys:
+            if key in pending:       # first occurrence of a fresh miss
+                pending.discard(key)
+                self.cache_misses += 1
+            else:
+                self.cache_hits += 1
+            out.append((key, self._noisy(key, self._cache[key])))
+        return out
+
+    def evaluate(self, schedules: Sequence[Schedule]) -> list[float]:
+        """Time per schedule, in order (see :meth:`evaluate_keyed`)."""
+        return [t for _, t in self.evaluate_keyed(schedules)]
+
+    def evaluate_one(self, schedule: Schedule) -> float:
+        return self.evaluate([schedule])[0]
+
+    def close(self) -> None:
+        """Release backend resources (worker pools etc.); idempotent."""
+
+    def __enter__(self) -> "EvaluatorBase":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class BatchEvaluator(EvaluatorBase):
+    """The serial reference backend: one discrete-event simulation per
+    canonical-unique schedule, under the analytic machine model."""
+
+    backend = "sim"
+
+    def _measure_batch(self, schedules: Sequence[Schedule],
+                       encoded: np.ndarray | None = None) -> list[float]:
+        return [simulate(self.graph, s, self.machine,
+                         durations=self._durations).makespan
+                for s in schedules]

@@ -1,0 +1,134 @@
+"""Process-pool evaluation backend: shard cache misses over workers.
+
+Discrete-event simulations of distinct schedules are independent, so a
+batch of canonical-unique cache misses shards cleanly over a
+``multiprocessing`` pool. Everything stateful stays in the parent —
+the memo cache, the ``cache_hits`` / ``cache_misses`` meters behind
+``run_search(sim_budget=)``, and the (canonical key, draw index) noise
+— so a pooled search is **bit-identical** to the serial backend: same
+(features, labels, times), same budget accounting, any worker count
+(tests/test_engine_pool.py locks this).
+
+Workers are initialized once with (graph, machine, durations) — the
+same precomputed duration table the parent would use, so worker math is
+the serial simulator's math — then receive contiguous shards of each
+miss batch as compact ``(k, 2, N)`` int32 canonical encodings (the
+base class computes them for the cache keys anyway): shipping arrays
+instead of pickled ``Schedule`` object trees keeps IPC cost below the
+simulation cost it parallelizes. Workers rebuild the schedules and run
+the serial discrete-event simulator; the canonical stream relabel is a
+bijection, under which the simulator is exactly invariant (columns of
+per-stream state permute), so results stay bit-identical to evaluating
+the original schedules. ``Pool.map`` preserves order, so results line
+up with the first-appearance miss order the base class expects.
+
+The default start method is ``forkserver`` (falling back to ``spawn``
+where unavailable): the parent typically has JAX loaded — whose thread
+pools make plain ``fork`` a documented deadlock hazard — while
+``repro.core``'s import tree is deliberately JAX-free (lazy imports in
+``core/executor.py``), so fresh workers start in well under a second
+with nothing but numpy. Pass ``start_method="fork"`` explicitly for
+single-threaded parents where inheriting the loaded modules is safe
+and cheapest.
+"""
+from __future__ import annotations
+
+import multiprocessing
+import os
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.costmodel import Machine, simulate
+from repro.core.dag import BoundOp, Graph, Schedule
+from repro.engine.base import EvaluatorBase
+
+_WORKER_STATE: tuple | None = None
+
+
+def _init_worker(graph: Graph, machine: Machine,
+                 durations: dict[str, float]) -> None:
+    global _WORKER_STATE
+    _WORKER_STATE = (graph, machine, durations, list(graph.ops))
+
+
+def _simulate_shard(encoded: np.ndarray) -> list[float]:
+    graph, machine, durations, names = _WORKER_STATE
+    out = []
+    for row in encoded:
+        items = tuple(
+            BoundOp(names[o], None if s < 0 else int(s))
+            for o, s in zip(row[0], row[1]))
+        out.append(simulate(graph, Schedule(items), machine,
+                            durations=durations).makespan)
+    return out
+
+
+class PoolEvaluator(EvaluatorBase):
+    """Evaluation backend fanning cache misses out to worker processes.
+
+    ``n_workers=None`` uses the CPU count. Small miss batches (fewer
+    than ``2 * min_shard`` schedules, i.e. not enough to give two
+    shards a meaningful size) skip the pool entirely — IPC would cost
+    more than the simulations. ``close()`` (or use as a context
+    manager) tears the pool down; it is also re-created lazily after a
+    close, so a closed evaluator still works.
+    """
+
+    backend = "pool"
+
+    def __init__(self, graph: Graph, machine: Machine | None = None,
+                 noise_sigma: float = 0.0, noise_seed: int = 0,
+                 n_workers: int | None = None, min_shard: int = 8,
+                 start_method: str | None = None):
+        super().__init__(graph, machine, noise_sigma, noise_seed)
+        self.n_workers = n_workers or (os.cpu_count() or 2)
+        self.min_shard = max(1, min_shard)
+        if start_method is None:
+            methods = multiprocessing.get_all_start_methods()
+            start_method = "forkserver" if "forkserver" in methods \
+                else "spawn"
+        self.start_method = start_method
+        self._pool = None
+
+    def _ensure_pool(self):
+        if self._pool is None:
+            ctx = multiprocessing.get_context(self.start_method)
+            self._pool = ctx.Pool(
+                self.n_workers, initializer=_init_worker,
+                initargs=(self.graph, self.machine, self._durations))
+        return self._pool
+
+    def _measure_batch(self, schedules: Sequence[Schedule],
+                       encoded: np.ndarray | None = None) -> list[float]:
+        n = len(schedules)
+        if n < self.min_shard * 2 or self.n_workers < 2:
+            return _serial_measure(self.graph, self.machine,
+                                   self._durations, schedules)
+        n_shards = min(self.n_workers, max(2, n // self.min_shard))
+        bounds = [n * k // n_shards for k in range(n_shards + 1)]
+        shards = [encoded[bounds[k]:bounds[k + 1]]
+                  for k in range(n_shards)]
+        out: list[float] = []
+        for part in self._ensure_pool().map(_simulate_shard, shards):
+            out.extend(part)
+        return out
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.terminate()
+            self._pool.join()
+            self._pool = None
+
+    def __del__(self):  # best-effort; context-manager close preferred
+        try:
+            self.close()
+        except Exception:
+            pass
+
+
+def _serial_measure(graph: Graph, machine: Machine,
+                    durations: dict[str, float],
+                    schedules: Sequence[Schedule]) -> list[float]:
+    return [simulate(graph, s, machine, durations=durations).makespan
+            for s in schedules]

@@ -2,12 +2,18 @@
 
 One strategy protocol (:class:`SearchStrategy`); strategies from
 exhaustive enumeration to the surrogate-screened two-stage search and
-the greedy→MCTS→surrogate portfolio; a batched + memoized evaluator;
-and the :func:`run_search` pipeline that turns any of them into the
-(features, labels, times) dataset the rules pipeline consumes. See
-README.md in this package for the contract.
+the greedy→MCTS→surrogate portfolio; the pluggable evaluation engine
+(:mod:`repro.engine`: serial, vectorized, process-pool, and wall-clock
+backends behind one memoized contract, selected via
+``run_search(backend=...)``); and the :func:`run_search` pipeline that
+turns any strategy × backend into the (features, labels, times) dataset
+the rules pipeline consumes. See README.md in this package and in
+:mod:`repro.engine` for the contracts.
 """
-from repro.search.evaluator import BatchEvaluator, canonical_key
+from repro.engine import (BACKENDS, BatchEvaluator, EvaluatorBase,
+                          ExecutorEvaluator, PoolEvaluator,
+                          VectorizedEvaluator, canonical_key,
+                          make_evaluator, register_backend)
 from repro.search.mcts import MCTSSearch
 from repro.search.pipeline import SearchResult, run_search
 from repro.search.strategy import (ExhaustiveSearch, GreedyCostModel,
@@ -17,7 +23,9 @@ from repro.search.surrogate import (PortfolioSearch, RidgeSurrogate,
                                     SurrogateGuided, spearman)
 
 __all__ = [
-    "BatchEvaluator", "canonical_key",
+    "BACKENDS", "BatchEvaluator", "EvaluatorBase", "ExecutorEvaluator",
+    "PoolEvaluator", "VectorizedEvaluator", "canonical_key",
+    "make_evaluator", "register_backend",
     "MCTSSearch",
     "SearchResult", "run_search",
     "ExhaustiveSearch", "GreedyCostModel", "RandomSearch",

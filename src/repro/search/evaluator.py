@@ -1,89 +1,12 @@
-"""Batched, memoized cost-model evaluation.
+"""Compatibility shim: the evaluator now lives in :mod:`repro.engine`.
 
-The search strategies propose thousands of candidate schedules; most of
-the simulation work is repeated: op durations depend only on (graph,
-machine), and stream-bijection-equivalent or re-proposed schedules have
-identical makespans. :class:`BatchEvaluator` amortizes both:
-
-  * op durations are computed once per (graph, machine) and reused by
-    every simulation in the batch (the roofline division per op is the
-    inner-loop cost of :func:`repro.core.costmodel.simulate`);
-  * a transposition/memo cache keyed on the *canonical* schedule hash
-    (stream-bijection normal form, §III-C2) simulates each distinct
-    implementation exactly once — duplicates within a batch and across
-    batches are cache hits.
-
-Results are bit-identical to per-schedule
-:func:`repro.core.costmodel.makespan` (see tests/test_batch_evaluator.py).
-
-``noise_sigma`` adds seeded multiplicative Gaussian noise *after* the
-cache, mimicking wall-clock measurement jitter: the underlying makespan
-is memoized, but every evaluation call draws fresh noise — matching how
-re-benchmarking a real program behaves.
-
-``cache_misses`` counts actual discrete-event simulations and is the
-meter behind ``run_search(sim_budget=N)``: equal-simulation
-comparisons between screened (surrogate) and unscreened strategies
-read it, so duplicates and surrogate-filtered candidates are free.
+``BatchEvaluator`` (the serial ``"sim"`` backend) and
+``canonical_key`` moved to the pluggable evaluation-engine subsystem —
+:mod:`repro.engine.base` — where they share the memo-cache / noise /
+budget-accounting layer with the vectorized, process-pool, and
+wall-clock backends. Import from :mod:`repro.engine` (or keep importing
+from here / :mod:`repro.search`; both stay supported).
 """
-from __future__ import annotations
+from repro.engine.base import BatchEvaluator, EvaluatorBase, canonical_key
 
-import random
-from typing import Sequence
-
-from repro.core.costmodel import Machine, op_durations, simulate
-from repro.core.dag import Graph, Schedule, canonicalize_streams
-
-
-def canonical_key(schedule: Schedule) -> tuple:
-    """Hashable identity under stream relabeling (transposition key)."""
-    return tuple((i.name, i.stream)
-                 for i in canonicalize_streams(schedule.items))
-
-
-class BatchEvaluator:
-    """Evaluate batches of schedules against the analytic machine model."""
-
-    def __init__(self, graph: Graph, machine: Machine | None = None,
-                 noise_sigma: float = 0.0, noise_seed: int = 0):
-        self.graph = graph
-        self.machine = machine or Machine()
-        self.noise_sigma = noise_sigma
-        self._noise_rng = random.Random(noise_seed)
-        self._durations = op_durations(graph, self.machine)
-        self._cache: dict[tuple, float] = {}
-        self.cache_hits = 0
-        self.cache_misses = 0
-
-    def __len__(self) -> int:
-        return len(self._cache)
-
-    def evaluate_keyed(self, schedules: Sequence[Schedule]
-                       ) -> list[tuple[tuple, float]]:
-        """(canonical key, makespan) per schedule, in order; one
-        simulation per distinct canonical schedule across the
-        evaluator's lifetime. The key is returned so callers that also
-        need it (run_search dedup) don't re-canonicalize."""
-        out: list[tuple[tuple, float]] = []
-        for s in schedules:
-            key = canonical_key(s)
-            t = self._cache.get(key)
-            if t is None:
-                self.cache_misses += 1
-                t = simulate(self.graph, s, self.machine,
-                             durations=self._durations).makespan
-                self._cache[key] = t
-            else:
-                self.cache_hits += 1
-            if self.noise_sigma:
-                t *= max(0.1, 1.0 + self._noise_rng.gauss(
-                    0.0, self.noise_sigma))
-            out.append((key, t))
-        return out
-
-    def evaluate(self, schedules: Sequence[Schedule]) -> list[float]:
-        """Makespan per schedule, in order (see :meth:`evaluate_keyed`)."""
-        return [t for _, t in self.evaluate_keyed(schedules)]
-
-    def evaluate_one(self, schedule: Schedule) -> float:
-        return self.evaluate([schedule])[0]
+__all__ = ["BatchEvaluator", "EvaluatorBase", "canonical_key"]

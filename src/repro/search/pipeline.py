@@ -3,8 +3,9 @@
 ``run_search`` is the one code path behind the paper reproduction
 (benchmarks/paper.py), the SpMV baseline, and the LM-step scenario
 (examples/schedule_search.py): it drives any :class:`SearchStrategy`
-against a :class:`BatchEvaluator` and collects the deduplicated
-(schedule, time) observations. ``SearchResult.dataset()`` then emits the
+against any evaluation-engine backend (:mod:`repro.engine` —
+serial/vectorized/pool/wallclock, selected with ``backend=``) and
+collects the deduplicated (schedule, time) observations. ``SearchResult.dataset()`` then emits the
 (features, labels, times) triple consumed by the learning stack
 (:mod:`repro.core.labels` / :mod:`repro.core.dtree` /
 :mod:`repro.core.rules`).
@@ -19,7 +20,8 @@ from repro.core.costmodel import Machine
 from repro.core.dag import Graph, Schedule
 from repro.core.features import FeatureMatrix, featurize
 from repro.core.labels import Labeling, label_times
-from repro.search.evaluator import BatchEvaluator
+from repro.engine import make_evaluator
+from repro.engine.base import EvaluatorBase
 from repro.search.strategy import SearchStrategy
 
 
@@ -56,7 +58,9 @@ def run_search(graph: Graph, strategy: SearchStrategy,
                machine: Machine | None = None,
                budget: int | None = 2000,
                batch_size: int = 1,
-               evaluator: BatchEvaluator | None = None,
+               evaluator: EvaluatorBase | None = None,
+               backend: str | None = None,
+               backend_kwargs: dict | None = None,
                sim_budget: int | None = None,
                stall_limit: int = 1000) -> SearchResult:
     """Drive ``strategy`` for up to ``budget`` evaluations.
@@ -86,19 +90,37 @@ def run_search(graph: Graph, strategy: SearchStrategy,
     after that many consecutive proposals without a single fresh
     simulation.
 
+    ``backend`` selects the evaluation engine by registry name
+    (:func:`repro.engine.make_evaluator`: ``"sim"`` (default),
+    ``"vectorized"``, ``"pool"``, ``"wallclock"``), with
+    ``backend_kwargs`` forwarded to its constructor — e.g.
+    ``backend="pool", backend_kwargs={"n_workers": 4}``. All analytic
+    backends are bit-identical, so the backend is a pure
+    throughput/objective choice. A backend created here is closed when
+    the search returns; pass a preconfigured ``evaluator`` instead to
+    keep its memo cache alive across runs.
+
     Every proposal is evaluated and fed back via ``observe``; the result
     keeps the first observation per canonical schedule (matching how the
     paper's MCTS records its rollout set). Pass either ``machine`` or a
-    preconfigured ``evaluator`` (which owns its machine), not both; a
-    shared evaluator keeps its memo cache across runs, and the result's
-    cache counters report this run's traffic only.
+    preconfigured ``evaluator`` (which owns its machine), not both (and
+    not ``backend`` with ``evaluator`` — the evaluator already *is* a
+    backend); a shared evaluator keeps its memo cache across runs, and
+    the result's cache counters report this run's traffic only.
     """
     if evaluator is not None and machine is not None:
         raise ValueError(
             "pass either machine= or evaluator= (the evaluator already "
             "owns a machine), not both")
+    if evaluator is not None and (backend is not None
+                                  or backend_kwargs is not None):
+        raise ValueError(
+            "pass either backend=/backend_kwargs= or a preconfigured "
+            "evaluator=, not both")
+    owns_evaluator = evaluator is None
     ev = evaluator if evaluator is not None else \
-        BatchEvaluator(graph, machine)
+        make_evaluator(graph, backend or "sim", machine=machine,
+                       **(backend_kwargs or {}))
     hits0, misses0 = ev.cache_hits, ev.cache_misses
     schedules: list[Schedule] = []
     times: list[float] = []
@@ -106,28 +128,33 @@ def run_search(graph: Graph, strategy: SearchStrategy,
     n_proposed = 0
     stalled = 0
 
-    while ((budget is None or n_proposed < budget) and
-           (sim_budget is None or ev.cache_misses - misses0 < sim_budget)):
-        ask = batch_size if budget is None else \
-            min(batch_size, budget - n_proposed)
-        batch = strategy.propose(ask)[:ask]
-        if not batch:
-            break
-        n_proposed += len(batch)
-        batch_misses0 = ev.cache_misses
-        for schedule, (key, t) in zip(batch, ev.evaluate_keyed(batch)):
-            strategy.observe(schedule, t)
-            if key not in seen:
-                seen.add(key)
-                schedules.append(schedule)
-                times.append(t)
-        if sim_budget is not None or budget is None:
-            if ev.cache_misses == batch_misses0:
-                stalled += len(batch)
-                if stalled >= stall_limit:
-                    break
-            else:
-                stalled = 0
+    try:
+        while ((budget is None or n_proposed < budget) and
+               (sim_budget is None
+                or ev.cache_misses - misses0 < sim_budget)):
+            ask = batch_size if budget is None else \
+                min(batch_size, budget - n_proposed)
+            batch = strategy.propose(ask)[:ask]
+            if not batch:
+                break
+            n_proposed += len(batch)
+            batch_misses0 = ev.cache_misses
+            for schedule, (key, t) in zip(batch, ev.evaluate_keyed(batch)):
+                strategy.observe(schedule, t)
+                if key not in seen:
+                    seen.add(key)
+                    schedules.append(schedule)
+                    times.append(t)
+            if sim_budget is not None or budget is None:
+                if ev.cache_misses == batch_misses0:
+                    stalled += len(batch)
+                    if stalled >= stall_limit:
+                        break
+                else:
+                    stalled = 0
+    finally:
+        if owns_evaluator:
+            ev.close()
 
     return SearchResult(graph=graph, schedules=schedules, times=times,
                         n_proposed=n_proposed,

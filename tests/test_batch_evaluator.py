@@ -103,6 +103,45 @@ def test_noise_is_post_cache_and_seeded(spmv_space):
     assert all(abs(t / clean - 1.0) < 0.5 for t in a)
 
 
+def test_noise_is_order_independent(spmv_space):
+    """Noise is seeded per (canonical key, draw index), so a permuted
+    batch gets the permuted noisy values — batch order, backend, and
+    worker sharding can never change what a schedule measures."""
+    import random
+    g, scheds = spmv_space
+    batch = scheds[:30]
+    perm = list(range(len(batch)))
+    random.Random(4).shuffle(perm)
+    ev_a = S.BatchEvaluator(g, noise_sigma=0.05, noise_seed=11)
+    ev_b = S.BatchEvaluator(g, noise_sigma=0.05, noise_seed=11)
+    straight = ev_a.evaluate(batch)
+    shuffled = ev_b.evaluate([batch[i] for i in perm])
+    assert shuffled == [straight[i] for i in perm]
+
+
+def test_noise_depends_on_seed(spmv_space):
+    g, scheds = spmv_space
+    s = scheds[0]
+    a = S.BatchEvaluator(g, noise_sigma=0.05, noise_seed=1).evaluate([s])
+    b = S.BatchEvaluator(g, noise_sigma=0.05, noise_seed=2).evaluate([s])
+    assert a != b
+
+
+def test_stats_reports_cache_traffic(spmv_space):
+    g, scheds = spmv_space
+    ev = S.BatchEvaluator(g)
+    assert ev.stats() == {"backend": "sim", "hits": 0, "misses": 0,
+                          "size": 0, "hit_rate": 0.0}
+    ev.evaluate(scheds[:20])
+    ev.evaluate(scheds[:30])
+    st = ev.stats()
+    assert st["backend"] == "sim"
+    assert st["misses"] == 30
+    assert st["hits"] == 20
+    assert st["size"] == len(ev) == 30
+    assert st["hit_rate"] == pytest.approx(20 / 50)
+
+
 def test_evaluate_one_matches_makespan(spmv_space):
     g, scheds = spmv_space
     ev = S.BatchEvaluator(g)

@@ -1,0 +1,102 @@
+"""engine.pool: sharded evaluation is byte-identical to serial.
+
+The memo cache, budget meters, and noise live in the parent, so a
+pooled search must reproduce the serial backend exactly — same
+(features, labels, times), same ``sim_budget`` accounting — for any
+worker count. Worker processes rebuild schedules from the compact
+canonical encodings, whose stream relabel the simulator is invariant
+under; this is what the identity here locks.
+"""
+import random
+
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.engine as E
+import repro.search as S
+from repro.core.dag import spmv_dag_fine
+from repro.search.strategy import random_schedule
+
+
+@pytest.fixture(scope="module")
+def pool_ev():
+    g = spmv_dag_fine()
+    with E.make_evaluator(g, "pool", n_workers=2, min_shard=1) as ev:
+        yield g, ev
+
+
+def test_pool_bit_identical_to_serial(pool_ev):
+    g, ev = pool_ev
+    rng = random.Random(7)
+    scheds = [random_schedule(g, 2, rng) for _ in range(64)]
+    assert ev.evaluate(scheds) == [C.makespan(g, s) for s in scheds]
+
+
+def test_pool_accounting_matches_serial():
+    g = spmv_dag_fine()
+    rng = random.Random(8)
+    scheds = [random_schedule(g, 2, rng) for _ in range(40)]
+    batch = scheds + scheds[:10]
+    ser = E.make_evaluator(g, "sim")
+    with E.make_evaluator(g, "pool", n_workers=2, min_shard=1) as ev:
+        assert ev.evaluate(batch) == ser.evaluate(batch)
+        assert (ev.cache_hits, ev.cache_misses) == \
+            (ser.cache_hits, ser.cache_misses)
+        assert len(ev) == len(ser)
+
+
+def test_run_search_pool_byte_identical_dataset():
+    """The acceptance lock: run_search(backend='pool') returns
+    byte-identical (features, labels, times) to the serial backend at
+    equal sim_budget."""
+    g = spmv_dag_fine()
+    datasets = {}
+    for backend, kwargs in (("sim", {}),
+                            ("pool", {"n_workers": 2, "min_shard": 1})):
+        res = S.run_search(g, S.MCTSSearch(g, 2, seed=5), budget=None,
+                           sim_budget=60, batch_size=8,
+                           backend=backend, backend_kwargs=kwargs)
+        datasets[backend] = (res, *res.dataset())
+    res_a, fm_a, lab_a, t_a = datasets["sim"]
+    res_b, fm_b, lab_b, t_b = datasets["pool"]
+    assert t_a.tobytes() == t_b.tobytes()
+    assert fm_a.X.tobytes() == fm_b.X.tobytes()
+    assert fm_a.names() == fm_b.names()
+    assert np.array_equal(lab_a.labels, lab_b.labels)
+    assert (res_a.cache_hits, res_a.cache_misses) == \
+        (res_b.cache_hits, res_b.cache_misses)
+
+
+def test_pool_noise_identical_to_serial_noise():
+    """(canonical key, draw index) noise seeding: pooled noisy
+    evaluation equals serial noisy evaluation exactly."""
+    g = C.spmv_dag()
+    rng = random.Random(3)
+    scheds = [random_schedule(g, 2, rng) for _ in range(24)]
+    with E.make_evaluator(g, "pool", n_workers=2, min_shard=1,
+                          noise_sigma=0.05, noise_seed=11) as pooled:
+        noisy_pool = pooled.evaluate(scheds)
+    ser = E.make_evaluator(g, "sim", noise_sigma=0.05, noise_seed=11)
+    assert noisy_pool == ser.evaluate(scheds)
+
+
+def test_pool_close_is_reentrant(pool_ev):
+    g, _ = pool_ev
+    ev = E.make_evaluator(g, "pool", n_workers=2, min_shard=1)
+    rng = random.Random(9)
+    scheds = [random_schedule(g, 2, rng) for _ in range(8)]
+    first = ev.evaluate(scheds)
+    ev.close()
+    ev.close()  # idempotent
+    # Lazily re-created after close; cache still warm.
+    assert ev.evaluate(scheds) == first
+    assert ev.cache_hits == len(scheds)
+    ev.close()
+
+
+def test_pool_stats_reports_backend(pool_ev):
+    g, ev = pool_ev
+    st = ev.stats()
+    assert st["backend"] == "pool"
+    assert set(st) == {"backend", "hits", "misses", "size", "hit_rate"}

@@ -1,7 +1,7 @@
 """End-to-end smoke gate (select with ``pytest -m smoke``)."""
 import pytest
 
-from benchmarks.smoke import run_smoke
+from benchmarks.smoke import run_backend_smoke, run_smoke
 
 
 @pytest.mark.smoke
@@ -14,3 +14,15 @@ def test_smoke_search_to_rules_end_to_end():
     assert out["n_classes"] >= 1
     assert out["n_rulesets"] >= 1
     assert out["training_error"] <= 0.05
+
+
+@pytest.mark.smoke
+def test_smoke_every_evaluation_backend():
+    """Fast path through all engine backends: the analytic ones must be
+    byte-identical, wallclock must complete with its value gate on."""
+    out = run_backend_smoke(budget=48, seed=0)
+    assert out["analytic_identical"]
+    for backend in ("sim", "vectorized", "pool", "wallclock"):
+        assert out[backend]["n_schedules"] >= 1
+        assert out[backend]["best_us"] > 0.0
+    assert out["pool"]["cache_misses"] == out["sim"]["cache_misses"]
