@@ -6,13 +6,16 @@ portfolio races plain MCTS under an *equal discrete-event-simulation
 budget* (``run_search(sim_budget=...)``, batch_size=1 for an exact
 cap). Rows report best makespans, the portfolio-vs-MCTS ratio, the
 surrogate's screening quality (candidates screened per simulation
-spent, Spearman rank correlation of predicted vs simulated times), and
-the portfolio evaluator's ``stats()`` cache-traffic summary.
+spent, Spearman rank correlation of predicted vs simulated times), the
+portfolio evaluator's ``stats()`` cache-traffic summary, and — via
+``repro.rules.distill`` — the design rules the portfolio's corpus
+supports (classes, rulesets, tree error).
 """
 from __future__ import annotations
 
 import time
 
+import repro.rules as R
 import repro.search as S
 from repro.core.dag import halo3d_dag, spmv_dag_fine
 
@@ -37,7 +40,14 @@ def _race(name: str, graph, sim_budget: int, seed: int = 0) -> list[str]:
     q = port.screening_quality()
     screened_per_sim = q["n_screened"] / max(1, res_p.cache_misses)
     st = ev_p.stats()
+    t0 = time.perf_counter()
+    rep = R.distill(res_p)
+    wall_r = (time.perf_counter() - t0) * 1e6
+    rs = rep.summary()
     return [
+        f"at_scale_{name}_rules,{wall_r:.2f},"
+        f"classes={rs['n_classes']}/rulesets={rs['n_rulesets']}/"
+        f"err={rs['training_error']:.3f}",
         f"at_scale_{name}_evaluator,{wall_p:.2f},"
         f"backend={st['backend']}/hits={st['hits']}/"
         f"misses={st['misses']}/size={st['size']}/"

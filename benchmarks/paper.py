@@ -1,18 +1,24 @@
 """Benchmarks reproducing each paper table/figure on our SpMV space.
 
 Every search below — exhaustive, MCTS, noisy MCTS — runs through the
-unified ``repro.search.run_search`` pipeline (one code path with the
-examples and the smoke test). Each function returns rows as CSV lines
-``name,us_per_call,derived``.
+unified ``repro.search.run_search`` pipeline, and every labels -> tree
+-> rules pass runs through ``repro.rules.distill`` (one code path with
+the examples and the smoke test). Each function returns rows as CSV
+lines ``name,us_per_call,derived``.
 """
 from __future__ import annotations
 
+import pathlib
 import time
 
 import numpy as np
 
 import repro.core as C
+import repro.rules as R
 import repro.search as S
+
+_RULES_MD = pathlib.Path(__file__).resolve().parents[1] \
+    / "experiments" / "rules_canonical.md"
 
 
 def _space(n_streams: int = 2):
@@ -20,7 +26,7 @@ def _space(n_streams: int = 2):
     g = C.spmv_dag()
     res = S.run_search(g, S.ExhaustiveSearch(g, n_streams), budget=None,
                        batch_size=64)
-    return g, res.schedules, res.times_array()
+    return res
 
 
 def _mcts(g, iters: int, seed: int, noise_sigma: float = 0.0):
@@ -34,11 +40,11 @@ def _mcts(g, iters: int, seed: int, noise_sigma: float = 0.0):
 def fig1_spread() -> list[str]:
     """Fig. 1: sorted exhaustive-search times; fastest vs slowest."""
     t0 = time.perf_counter()
-    g, scheds, times = _space()
-    wall = (time.perf_counter() - t0) / max(1, len(scheds)) * 1e6
-    s = np.sort(times)
+    res = _space()
+    wall = (time.perf_counter() - t0) / max(1, len(res.schedules)) * 1e6
+    s = np.sort(res.times_array())
     rows = [
-        f"fig1_n_implementations,{wall:.2f},{len(scheds)}",
+        f"fig1_n_implementations,{wall:.2f},{len(res.schedules)}",
         f"fig1_speedup_spread,{wall:.2f},{s[-1] / s[0]:.3f}",
         f"fig1_fastest_us,{wall:.2f},{s[0] * 1e6:.2f}",
         f"fig1_slowest_us,{wall:.2f},{s[-1] * 1e6:.2f}",
@@ -47,11 +53,13 @@ def fig1_spread() -> list[str]:
 
 
 def fig4_labels() -> list[str]:
-    """Fig. 4: convolution + peak detection class labeling."""
-    g, scheds, times = _space()
-    t0 = time.perf_counter()
-    lab = C.label_times(times)
-    wall = (time.perf_counter() - t0) * 1e6
+    """Fig. 4: convolution + peak detection class labeling (via the
+    distillation pipeline; the row wall is the labeling stage only, so
+    the us_per_call trajectory stays comparable across BENCH_N files)."""
+    res = _space()
+    rep = R.distill(res)
+    wall = rep.stage_seconds["label"] * 1e6
+    lab = rep.labeling
     sizes = np.bincount(lab.labels)
     return [
         f"fig4_n_classes,{wall:.2f},{lab.n_classes}",
@@ -62,70 +70,61 @@ def fig4_labels() -> list[str]:
 
 
 def fig5_tree() -> list[str]:
-    """Fig. 5: Algorithm 1 hyperparameter search trace."""
-    g, scheds, times = _space()
-    lab = C.label_times(times)
-    fm = C.featurize(g, scheds)
-    trace = C.TreeSearchTrace([], [], [])
-    t0 = time.perf_counter()
-    tree = C.algorithm1(fm.X, lab.labels, trace=trace)
-    wall = (time.perf_counter() - t0) * 1e6
+    """Fig. 5: Algorithm 1 hyperparameter search trace (row wall: the
+    tree stage only, comparable with earlier BENCH_N files)."""
+    res = _space()
+    rep = R.distill(res)
+    wall = rep.stage_seconds["tree"] * 1e6
+    s = rep.summary()
     return [
-        f"fig5_final_leaves,{wall:.2f},{tree.n_leaves()}",
-        f"fig5_final_depth,{wall:.2f},{tree.depth()}",
-        f"fig5_final_error,{wall:.2f},"
-        f"{tree.training_error(fm.X, lab.labels):.4f}",
-        f"fig5_trials,{wall:.2f},{len(trace.max_leaf_nodes)}",
+        f"fig5_final_leaves,{wall:.2f},{s['n_leaves']}",
+        f"fig5_final_depth,{wall:.2f},{s['tree_depth']}",
+        f"fig5_final_error,{wall:.2f},{s['training_error']:.4f}",
+        f"fig5_trials,{wall:.2f},{s['algorithm1_trials']}",
     ]
 
 
 def table5_accuracy() -> list[str]:
     """Table V: MCTS iterations vs class-range accuracy on the full
     space (paper: 0.75/0.83/0.96/0.99/1.0 at 50/100/200/400/2036)."""
-    g, scheds, times = _space()
+    res_full = _space()
+    g = res_full.graph
+    full = (res_full.schedules, res_full.times_array())
     rows = []
     for iters in (25, 50, 100, 200, 1200):
         t0 = time.perf_counter()
         res = _mcts(g, iters, seed=1)
-        fm, lab, _ = res.dataset()
-        tree = C.algorithm1(fm.X, lab.labels)
-        Xf = C.featurize_like(g, scheds, fm)
-        acc = C.class_range_accuracy(tree, Xf, times,
-                                     lab.class_ranges())
+        rep = R.distill(res, full_space=full)
         wall = (time.perf_counter() - t0) / iters * 1e6
-        rows.append(f"table5_acc_iters{iters},{wall:.2f},{acc:.3f}")
+        rows.append(f"table5_acc_iters{iters},{wall:.2f},"
+                    f"{rep.class_range_acc:.3f}")
     return rows
 
 
-def tables678_rules() -> list[str]:
+def tables678_rules(rules_path: "str | pathlib.Path" = _RULES_MD
+                    ) -> list[str]:
     """Tables VI-VIII: rulesets per class for reduced MCTS budgets,
-    annotated against the canonical (exhaustive) rules."""
-    g, scheds, times = _space()
-    lab = C.label_times(times)
-    fm = C.featurize(g, scheds)
-    canon_tree = C.algorithm1(fm.X, lab.labels)
-    canon = C.extract_rulesets(canon_tree, fm.features)
+    annotated against the canonical (exhaustive-search) rules.
+
+    The canonical report is rendered to ``rules_path`` — an explicit
+    argument (default: experiments/rules_canonical.md), not a hidden
+    side effect.
+    """
+    res_full = _space()
+    g = res_full.graph
+    canon = R.distill(res_full)
     rows = []
     for iters in (50, 100, 200):
         t0 = time.perf_counter()
         res = _mcts(g, iters, seed=2)
-        fm_i, lab_i, _ = res.dataset()
-        tree_i = C.algorithm1(fm_i.X, lab_i.labels)
-        rs = C.extract_rulesets(tree_i, fm_i.features)
-        C.annotate_vs_canonical(rs, canon)
-        n_over = sum(bool(r.extraneous) for r in rs)
-        n_under = sum(r.insufficient for r in rs)
+        rep = R.distill(res, canonical=canon)
+        s = rep.summary()
         wall = (time.perf_counter() - t0) * 1e6
         rows.append(
             f"tables678_iters{iters},{wall:.2f},"
-            f"rulesets={len(rs)}/over={n_over}/under={n_under}")
-    # persist the rendered rules for EXPERIMENTS.md
-    import pathlib
-    out = pathlib.Path(__file__).resolve().parents[1] / "experiments"
-    out.mkdir(exist_ok=True)
-    grouped = C.rules_by_class(canon)
-    (out / "rules_canonical.md").write_text(
-        C.render_rules_table(grouped))
+            f"rulesets={s['n_rulesets']}/over={s['n_overconstrained']}"
+            f"/under={s['n_underconstrained']}")
+    canon.write(rules_path)
     return rows
 
 
@@ -165,7 +164,7 @@ def granularity_ablation() -> list[str]:
                        budget=2000)
     wall = (time.perf_counter() - t0) / 2000 * 1e6
     tf = res.times_array()
-    g_coarse, _, tc = _space()
+    tc = _space().times_array()
     return [
         f"granularity_fine_best_us,{wall:.2f},{tf.min() * 1e6:.2f}",
         f"granularity_coarse_best_us,{wall:.2f},{tc.min() * 1e6:.2f}",
@@ -179,21 +178,19 @@ def noise_robustness() -> list[str]:
     """Beyond-paper: labeling robustness under measurement noise (the
     paper's empirical times are noisy; our machine model lets us dose
     noise explicitly). Reports Table-V-style accuracy at 200 MCTS
-    iterations under multiplicative Gaussian noise."""
-    g, scheds, times = _space()
+    iterations under multiplicative Gaussian noise, widening the class
+    ranges by the noise level (``distill(range_widen=3*sigma)``)."""
+    res_full = _space()
+    g = res_full.graph
+    full = (res_full.schedules, res_full.times_array())
     rows = []
     for sigma in (0.0, 0.01, 0.05):
         t0 = time.perf_counter()
         res = _mcts(g, 200, seed=3, noise_sigma=sigma)
-        fm, lab, _ = res.dataset()
-        tree = C.algorithm1(fm.X, lab.labels)
-        Xf = C.featurize_like(g, scheds, fm)
-        # widen class ranges by the noise level for the range test
-        ranges = [(lo * (1 - 3 * sigma), hi * (1 + 3 * sigma))
-                  for lo, hi in lab.class_ranges()]
-        acc = C.class_range_accuracy(tree, Xf, times, ranges)
+        rep = R.distill(res, full_space=full, range_widen=3 * sigma)
         wall = (time.perf_counter() - t0) * 1e6
         rows.append(
             f"noise_acc_sigma{sigma},{wall:.2f},"
-            f"{acc:.3f}/classes={lab.n_classes}")
+            f"{rep.class_range_acc:.3f}/classes="
+            f"{rep.labeling.n_classes}")
     return rows

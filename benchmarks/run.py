@@ -1,12 +1,13 @@
 """Benchmark harness — one function per paper table/figure, plus kernel,
-substrate, featurization, evaluation-engine, and at-scale search benches.
+substrate, featurization, evaluation-engine, tree-kernel/surrogate, and
+at-scale search benches.
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
 writes the same rows as machine-readable JSON
 (``[{"name":..., "us_per_call":..., "derived":...}, ...]``) so the
 perf trajectory can accumulate across PRs, e.g.::
 
-    PYTHONPATH=src python benchmarks/run.py --json BENCH_3.json
+    PYTHONPATH=src python benchmarks/run.py --json BENCH_4.json
 """
 from __future__ import annotations
 
@@ -28,12 +29,13 @@ from benchmarks.paper import (fig1_spread, fig4_labels, fig5_tree,
                               granularity_ablation, noise_robustness,
                               stepdag_overlap, table5_accuracy,
                               tables678_rules)
+from benchmarks.trees_bench import trees_benches
 
 BENCH_FNS = (fig1_spread, fig4_labels, fig5_tree, table5_accuracy,
              tables678_rules, stepdag_overlap, granularity_ablation,
-             noise_robustness, featurize_benches, engine_benches,
-             at_scale_benches, search_eval_benches, kernel_benches,
-             model_benches)
+             noise_robustness, featurize_benches, trees_benches,
+             engine_benches, at_scale_benches, search_eval_benches,
+             kernel_benches, model_benches)
 
 
 def parse_row(row: str) -> dict:

@@ -1,7 +1,8 @@
 """30-second end-to-end smoke pass: search -> labels -> tree -> rules.
 
-Runs the full paper pipeline through the unified search subsystem on
-the SpMV DAG with a small MCTS budget. Used two ways:
+Runs the full paper pipeline through the unified search subsystem and
+the ``repro.rules.distill`` rules pipeline on the SpMV DAG with a
+small MCTS budget. Used two ways:
 
   * ``PYTHONPATH=src python benchmarks/smoke.py`` prints the summary;
   * ``pytest -m smoke`` runs it as a marked test
@@ -17,31 +18,33 @@ from __future__ import annotations
 import time
 
 import repro.core as C
+import repro.rules as R
 import repro.search as S
 
 
 def run_smoke(budget: int = 200, seed: int = 0,
               backend: str | None = None,
               backend_kwargs: dict | None = None) -> dict:
-    """One end-to-end search->rules pass; returns a summary dict."""
+    """One end-to-end search->distill pass; returns a summary dict."""
     t0 = time.perf_counter()
     g = C.spmv_dag()
     res = S.run_search(g, S.MCTSSearch(g, 2, seed=seed), budget=budget,
                        backend=backend, backend_kwargs=backend_kwargs)
-    fm, lab, times = res.dataset()
-    tree = C.algorithm1(fm.X, lab.labels)
-    rulesets = C.extract_rulesets(tree, fm.features)
+    report = R.distill(res)
+    times = res.times_array()
     best, best_t = res.best()
+    rendered = report.render()
     return {
         "n_evaluations": res.n_proposed,
         "n_schedules": len(res.schedules),
         "cache_hits": res.cache_hits,
         "best_us": best_t * 1e6,
         "spread": float(times.max() / times.min()),
-        "n_classes": lab.n_classes,
-        "n_features": len(fm.features),
-        "n_rulesets": len(rulesets),
-        "training_error": tree.training_error(fm.X, lab.labels),
+        "n_classes": report.labeling.n_classes,
+        "n_features": len(report.feature_matrix.features),
+        "n_rulesets": len(report.rulesets),
+        "training_error": report.training_error,
+        "report_lines": rendered.count("\n"),
         "best_order": " ".join(str(i) for i in best.items
                                if i.name not in ("start", "end")),
         "wall_s": time.perf_counter() - t0,

@@ -1,0 +1,148 @@
+"""Tree-kernel benchmarks: vectorized CART vs the loop reference, and
+the gradient-boosted vs ridge surrogate screening race.
+
+``tree_train_benches`` builds a Table-V-scale dataset (2000 random
+halo3d schedules -> §IV-B features + §IV-A labels) and measures:
+
+  * one ``DecisionTree`` fit, loop splitter vs vectorized splitter
+    (cold = including the ``Presort`` analysis, warm = analysis
+    shared, as the Algorithm-1 sweep and boosting rounds use it);
+  * the full warm-started ``algorithm1`` sweep vs the seed-style loop
+    sweep (fresh fit per trial, no shared presort / split cache);
+  * a prediction-identity checksum between the two splitters — the
+    speedup rows only count if the trees agree.
+
+``surrogate_screen_benches`` races ``SurrogateGuided`` on halo3d with
+the ridge vs the gradient-boosted surrogate at an equal
+discrete-event-simulation budget (``sim_budget``, batch_size=1) and
+reports each model's screening Spearman — the ROADMAP "smarter
+surrogates" acceptance numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.rules as R
+import repro.search as S
+from repro.core.dag import halo3d_dag
+
+TRAIN_N = 2000          # Table-V-scale corpus (halo3d schedules)
+SCREEN_SIMS = 300       # equal simulation budget for the screen race
+
+
+def _halo3d_dataset(n: int = TRAIN_N, seed: int = 0):
+    g = halo3d_dag()
+    res = S.run_search(g, S.RandomSearch(g, 2, seed=seed), budget=n,
+                       batch_size=64, backend="vectorized")
+    fm, lab, _times = res.dataset()
+    return fm, lab
+
+
+def _loop_algorithm1(X: np.ndarray, y: np.ndarray) -> R.DecisionTree:
+    """Seed-style Algorithm 1: fresh loop-splitter fit per trial, no
+    shared presort or split cache (the honest pre-refactor baseline)."""
+    mln = max(2, len(np.unique(y)))
+
+    def train(k):
+        t = R.DecisionTree(max_leaf_nodes=k, max_depth=k - 1,
+                           splitter="loop").fit(X, y)
+        return t.training_error(X, y), t
+
+    err, clf = train(mln)
+    improved = True
+    while improved and err > 0.0:
+        improved = False
+        for i in range(1, 6):
+            cur, nclf = train(mln + i)
+            if cur < err:
+                err, clf, mln = cur, nclf, mln + i
+                improved = True
+                break
+    return clf
+
+
+def tree_train_benches() -> list[str]:
+    fm, lab = _halo3d_dataset()
+    X, y = fm.X, lab.labels
+
+    t0 = time.perf_counter()
+    t_loop_tree = R.DecisionTree(8, 7, splitter="loop").fit(X, y)
+    fit_loop = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    R.DecisionTree(8, 7).fit(X, y)
+    fit_cold = time.perf_counter() - t0
+
+    ps = R.Presort(X)
+    t0 = time.perf_counter()
+    t_vec_tree = R.DecisionTree(8, 7).fit(X, y, presort=ps)
+    fit_warm = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    loop_alg = _loop_algorithm1(X, y)
+    alg_loop = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    vec_alg = R.algorithm1(X, y)
+    alg_vec = time.perf_counter() - t0
+
+    identical = bool(
+        (t_loop_tree.predict(X) == t_vec_tree.predict(X)).all()
+        and (loop_alg.predict(X) == vec_alg.predict(X)).all())
+    return [
+        f"trees_fit_loop_ms,{fit_loop * 1e6:.2f},"
+        f"{fit_loop * 1e3:.1f}",
+        f"trees_fit_vectorized_cold_ms,{fit_cold * 1e6:.2f},"
+        f"{fit_cold * 1e3:.1f}",
+        f"trees_fit_vectorized_warm_ms,{fit_warm * 1e6:.2f},"
+        f"{fit_warm * 1e3:.1f}",
+        f"trees_fit_speedup_warm,{fit_warm * 1e6:.2f},"
+        f"{fit_loop / fit_warm:.1f}",
+        f"trees_algorithm1_loop_ms,{alg_loop * 1e6:.2f},"
+        f"{alg_loop * 1e3:.1f}",
+        f"trees_algorithm1_vectorized_ms,{alg_vec * 1e6:.2f},"
+        f"{alg_vec * 1e3:.1f}",
+        f"trees_algorithm1_speedup,{alg_vec * 1e6:.2f},"
+        f"{alg_loop / alg_vec:.1f}",
+        f"trees_prediction_identical,{alg_vec * 1e6:.2f},{identical}",
+    ]
+
+
+def surrogate_screen_benches() -> list[str]:
+    rows = []
+    quality = {}
+    for name in ("ridge", "boost"):
+        g = halo3d_dag()
+        strat = S.SurrogateGuided(g, 2, seed=0, surrogate=name)
+        ev = S.make_evaluator(g, "vectorized")
+        t0 = time.perf_counter()
+        res = S.run_search(g, strat, budget=None,
+                           sim_budget=SCREEN_SIMS, batch_size=1,
+                           evaluator=ev)
+        wall = (time.perf_counter() - t0) \
+            / max(1, res.cache_misses) * 1e6
+        q = strat.screening_quality()
+        quality[name] = q["spearman"]
+        rows += [
+            f"screen_{name}_halo3d_spearman,{wall:.2f},"
+            f"{q['spearman']:.3f}",
+            f"screen_{name}_halo3d_best_us,{wall:.2f},"
+            f"{res.best()[1] * 1e6:.2f}",
+            f"screen_{name}_halo3d_sims,{wall:.2f},"
+            f"{res.cache_misses}_of_{SCREEN_SIMS}",
+        ]
+    rows.append(
+        f"screen_boost_vs_ridge_spearman,0.00,"
+        f"{quality['boost'] - quality['ridge']:+.3f}")
+    return rows
+
+
+def trees_benches() -> list[str]:
+    return tree_train_benches() + surrogate_screen_benches()
+
+
+if __name__ == "__main__":
+    for row in trees_benches():
+        print(row)

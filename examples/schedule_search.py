@@ -13,10 +13,11 @@ output, for a 2026 workload.
 Usage: PYTHONPATH=src python examples/schedule_search.py
            [--arch qwen2.5-32b] [--layers 4] [--iters 600]
            [--strategy portfolio|mcts] [--backend sim|vectorized|pool]
+           [--surrogate ridge|boost] [--rules [PATH]]
 """
 import argparse
 
-import repro.core as C
+import repro.rules as R
 import repro.search as S
 from repro.configs import get_config
 from repro.core.stepdag import StepCosts, train_step_dag, \
@@ -61,6 +62,16 @@ def main() -> None:
                          "the sim backend (the paper's strictly "
                          "sequential loop) and 32 for vectorized/pool, "
                          "which only amortize across batches")
+    ap.add_argument("--surrogate", choices=tuple(sorted(S.SURROGATES)),
+                    default="ridge",
+                    help="screening model for the portfolio's "
+                         "exploitation phase (repro.search surrogate "
+                         "registry; 'boost' = gradient-boosted trees)")
+    ap.add_argument("--rules", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="render the full design-rule report "
+                         "(repro.rules.distill) to PATH, or to stdout "
+                         "when given without a value")
     args = ap.parse_args()
     if args.batch_size is None:
         args.batch_size = 1 if args.backend == "sim" else 32
@@ -73,7 +84,8 @@ def main() -> None:
           f"{args.layers} stages")
 
     if args.strategy == "portfolio":
-        strategy = S.PortfolioSearch(graph, args.channels, seed=0)
+        strategy = S.PortfolioSearch(graph, args.channels, seed=0,
+                                     surrogate=args.surrogate)
     else:
         strategy = S.MCTSSearch(graph, args.channels, seed=0)
     res = S.run_search(graph, strategy, budget=args.iters,
@@ -94,11 +106,15 @@ def main() -> None:
           " ".join(str(i) for i in best.items
                    if i.name not in ("start", "end")))
 
-    fm, labels, _ = res.dataset()
-    tree = C.algorithm1(fm.X, labels.labels)
-    rulesets = C.extract_rulesets(tree, fm.features)
-    print(f"\n{labels.n_classes} performance classes; design rules:")
-    print(C.render_rules_table(C.rules_by_class(rulesets), top_k=2))
+    report = R.distill(res)
+    print(f"\n{report.labeling.n_classes} performance classes; "
+          f"design rules:")
+    print(R.render_rules_table(report.grouped(), top_k=2))
+    if args.rules == "-":
+        print("\n" + report.render())
+    elif args.rules is not None:
+        path = report.write(args.rules)
+        print(f"\nfull design-rule report written to {path}")
 
     # Roofline context for the fastest schedule.
     total_flops = sum(op.flops for op in graph.ops.values())

@@ -5,10 +5,14 @@ Pipeline (paper Fig. 2):
 
     Graph (dag.py)  ->  MCTS (mcts.py) / exhaustive (enumerate.py)
         -> measured times (costmodel.py analytic | executor.py wall-clock)
-        -> class labels (labels.py)
+        -> class labels (repro.rules.labels, shim: labels.py)
         -> feature vectors (features.py)
-        -> decision tree (dtree.py)
-        -> design rules (rules.py)
+        -> decision tree (repro.rules.trees, shim: dtree.py)
+        -> design rules (repro.rules.rulesets, shim: rules.py)
+
+The labels -> tree -> rules stack lives in :mod:`repro.rules` (one
+call: :func:`repro.rules.distill`); this package re-exports it through
+shims for compatibility.
 """
 from repro.core.dag import (BoundOp, CommRole, Graph, Op, OpKind, Schedule,
                             canonicalize_streams, spmv_dag,

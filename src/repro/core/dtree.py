@@ -1,249 +1,15 @@
-"""CART decision tree (from scratch) + the paper's Algorithm 1.
+"""Compatibility shim: trees now live in :mod:`repro.rules.trees`.
 
-This container has no scikit-learn, so we implement the subset of
-``DecisionTreeClassifier`` the paper uses: CART with gini impurity,
-``class_weight='balanced'``, ``max_leaf_nodes`` (best-first growth by
-weighted impurity decrease, like sklearn) and ``max_depth``.
-
-The tree is intentionally allowed to overfit (paper §IV-C): it describes
-the explored design space; generalization is measured separately
-(Table V).
+``DecisionTree`` / ``algorithm1`` moved into the rules distillation
+subsystem — :mod:`repro.rules` — where the vectorized sort-based split
+kernel is shared between the design-rule tree, the warm-started
+Algorithm-1 sweep, and the gradient-boosted surrogate's
+:class:`~repro.rules.trees.RegressionTree`. Import from
+:mod:`repro.rules` (or keep importing from here / :mod:`repro.core`;
+both stay supported).
 """
-from __future__ import annotations
+from repro.rules.trees import (DecisionTree, Presort, RegressionTree,
+                               TreeNode, TreeSearchTrace, algorithm1)
 
-import dataclasses
-import heapq
-import itertools
-
-import numpy as np
-
-
-@dataclasses.dataclass
-class TreeNode:
-    node_id: int
-    depth: int
-    indices: np.ndarray                  # training rows in this node
-    value: np.ndarray                    # weighted class counts
-    n_samples: int
-    feature: int | None = None           # split feature (None = leaf)
-    threshold: float = 0.5
-    left: "TreeNode | None" = None
-    right: "TreeNode | None" = None
-
-    @property
-    def is_leaf(self) -> bool:
-        return self.feature is None
-
-    def majority_class(self) -> int:
-        return int(np.argmax(self.value))
-
-
-def _gini(weighted_counts: np.ndarray) -> float:
-    tot = weighted_counts.sum()
-    if tot <= 0:
-        return 0.0
-    p = weighted_counts / tot
-    return float(1.0 - np.sum(p * p))
-
-
-@dataclasses.dataclass
-class _Candidate:
-    gain: float
-    feature: int
-    threshold: float
-    left_idx: np.ndarray
-    right_idx: np.ndarray
-    left_value: np.ndarray
-    right_value: np.ndarray
-
-
-class DecisionTree:
-    """CART classifier (gini, balanced class weights, best-first growth)."""
-
-    def __init__(self, max_leaf_nodes: int, max_depth: int | None = None):
-        if max_leaf_nodes < 2:
-            raise ValueError("max_leaf_nodes must be >= 2")
-        self.max_leaf_nodes = max_leaf_nodes
-        self.max_depth = max_depth
-        self.root: TreeNode | None = None
-        self.n_classes = 0
-        self.classes_: np.ndarray | None = None
-
-    # -- fitting ----------------------------------------------------------
-    def fit(self, X: np.ndarray, y: np.ndarray) -> "DecisionTree":
-        X = np.asarray(X, dtype=np.float64)
-        y = np.asarray(y)
-        self.classes_, y_enc = np.unique(y, return_inverse=True)
-        self.n_classes = len(self.classes_)
-        n = len(y_enc)
-        # class_weight='balanced': w_c = n / (k * n_c)
-        counts = np.bincount(y_enc, minlength=self.n_classes)
-        class_w = np.where(counts > 0,
-                           n / (self.n_classes * np.maximum(counts, 1)), 0.0)
-        sample_w = class_w[y_enc]
-
-        def node_value(idx: np.ndarray) -> np.ndarray:
-            return np.bincount(y_enc[idx], weights=sample_w[idx],
-                               minlength=self.n_classes)
-
-        ids = itertools.count()
-        all_idx = np.arange(n)
-        self.root = TreeNode(next(ids), 0, all_idx, node_value(all_idx),
-                             n_samples=n)
-
-        def best_split(node: TreeNode) -> _Candidate | None:
-            idx = node.indices
-            if len(idx) < 2:
-                return None
-            parent_imp = _gini(node.value)
-            if parent_imp == 0.0:
-                return None
-            tot_w = node.value.sum()
-            best: _Candidate | None = None
-            Xn = X[idx]
-            for f in range(X.shape[1]):
-                col = Xn[:, f]
-                vals = np.unique(col)
-                if len(vals) < 2:
-                    continue
-                thresholds = (vals[:-1] + vals[1:]) / 2.0
-                for t in thresholds:
-                    mask = col <= t
-                    li, ri = idx[mask], idx[~mask]
-                    lv, rv = node_value(li), node_value(ri)
-                    lw, rw = lv.sum(), rv.sum()
-                    child_imp = (lw * _gini(lv) + rw * _gini(rv)) / tot_w
-                    gain = tot_w * (parent_imp - child_imp)
-                    if best is None or gain > best.gain + 1e-15:
-                        best = _Candidate(gain, f, float(t), li, ri, lv, rv)
-            # Zero-gain splits are allowed (CART/sklearn semantics): XOR-
-            # style labels need a gainless first split to become
-            # separable; max_leaf_nodes bounds growth.
-            if best is not None and best.gain < -1e-12:
-                return None
-            return best
-
-        # Best-first growth: split the frontier leaf with the largest
-        # impurity-decrease until max_leaf_nodes is reached.
-        heap: list[tuple[float, int, TreeNode, _Candidate]] = []
-
-        def push(node: TreeNode) -> None:
-            if self.max_depth is not None and node.depth >= self.max_depth:
-                return
-            cand = best_split(node)
-            if cand is not None:
-                heapq.heappush(heap, (-cand.gain, node.node_id, node, cand))
-
-        push(self.root)
-        n_leaves = 1
-        while heap and n_leaves < self.max_leaf_nodes:
-            _, _, node, cand = heapq.heappop(heap)
-            node.feature = cand.feature
-            node.threshold = cand.threshold
-            node.left = TreeNode(next(ids), node.depth + 1, cand.left_idx,
-                                 cand.left_value, len(cand.left_idx))
-            node.right = TreeNode(next(ids), node.depth + 1, cand.right_idx,
-                                  cand.right_value, len(cand.right_idx))
-            n_leaves += 1
-            push(node.left)
-            push(node.right)
-        return self
-
-    # -- inference ----------------------------------------------------------
-    def _leaf(self, x: np.ndarray) -> TreeNode:
-        node = self.root
-        assert node is not None, "tree not fitted"
-        while not node.is_leaf:
-            node = node.left if x[node.feature] <= node.threshold \
-                else node.right
-        return node
-
-    def predict(self, X: np.ndarray) -> np.ndarray:
-        X = np.asarray(X, dtype=np.float64)
-        out = np.array([self._leaf(x).majority_class() for x in X])
-        return self.classes_[out]
-
-    def training_error(self, X: np.ndarray, y: np.ndarray) -> float:
-        return float(np.mean(self.predict(X) != np.asarray(y)))
-
-    # -- structure ----------------------------------------------------------
-    def leaves(self) -> list[TreeNode]:
-        out: list[TreeNode] = []
-
-        def walk(node: TreeNode) -> None:
-            if node.is_leaf:
-                out.append(node)
-            else:
-                walk(node.left)
-                walk(node.right)
-
-        if self.root is not None:
-            walk(self.root)
-        return out
-
-    def depth(self) -> int:
-        def d(node: TreeNode) -> int:
-            if node.is_leaf:
-                return node.depth
-            return max(d(node.left), d(node.right))
-        return d(self.root) if self.root is not None else 0
-
-    def n_leaves(self) -> int:
-        return len(self.leaves())
-
-    def paths(self) -> list[tuple[list[tuple[int, float, bool]], TreeNode]]:
-        """All (path, leaf) pairs; path = [(feature, threshold, went_right)]."""
-        out = []
-
-        def walk(node: TreeNode, path):
-            if node.is_leaf:
-                out.append((list(path), node))
-                return
-            walk(node.left, path + [(node.feature, node.threshold, False)])
-            walk(node.right, path + [(node.feature, node.threshold, True)])
-
-        if self.root is not None:
-            walk(self.root, [])
-        return out
-
-
-@dataclasses.dataclass
-class TreeSearchTrace:
-    max_leaf_nodes: list[float]
-    errors: list[float]
-    depths: list[int]
-
-
-def algorithm1(X: np.ndarray, y: np.ndarray,
-               initial_leaves: int | None = None,
-               trace: TreeSearchTrace | None = None) -> DecisionTree:
-    """Paper Algorithm 1: grow max_leaf_nodes until error stops shrinking.
-
-    ``train(mln)`` fits a tree with max_leaf_nodes=mln and
-    max_depth=mln-1. Starting leaf count = number of classes (the paper's
-    listing initialises with 2; we use max(2, n_classes) per §IV-C text).
-    """
-    n_classes = len(np.unique(y))
-    mln = initial_leaves if initial_leaves is not None \
-        else max(2, n_classes)
-
-    def train(k: int) -> tuple[float, DecisionTree]:
-        t = DecisionTree(max_leaf_nodes=k, max_depth=k - 1).fit(X, y)
-        e = t.training_error(X, y)
-        if trace is not None:
-            trace.max_leaf_nodes.append(k)
-            trace.errors.append(e)
-            trace.depths.append(t.depth())
-        return e, t
-
-    err, clf = train(mln)
-    improved = True
-    while improved and err > 0.0:
-        improved = False
-        for i in range(1, 6):
-            cur, nclf = train(mln + i)
-            if cur < err:
-                err, clf, mln = cur, nclf, mln + i
-                improved = True
-                break
-    return clf
+__all__ = ["DecisionTree", "Presort", "RegressionTree", "TreeNode",
+           "TreeSearchTrace", "algorithm1"]

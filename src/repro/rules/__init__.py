@@ -1,0 +1,49 @@
+"""Rules distillation subsystem: labels -> trees -> design rules.
+
+The paper's headline deliverable (§IV, Algorithm 1, Tables VI-VIII) as
+one subsystem, mirroring the :mod:`repro.engine` refactor:
+
+* :mod:`repro.rules.labels` — §IV-A convolution/peak performance-class
+  labeling;
+* :mod:`repro.rules.trees` — vectorized sort-based CART
+  (:class:`DecisionTree`), the warm-started Algorithm-1 sweep, and the
+  :class:`RegressionTree` base learner, all on one shared split kernel
+  and :class:`Presort` cache;
+* :mod:`repro.rules.rulesets` — §IV-D/§V ruleset extraction,
+  canonical-annotation, Table-V class-range accuracy;
+* :mod:`repro.rules.boost` — :class:`GradientBoostedSurrogate`, the
+  tree-ensemble cost model behind the ``"boost"`` surrogate backend;
+* :mod:`repro.rules.pipeline` — :func:`distill`, the end-to-end
+  search-result -> :class:`RuleReport` API.
+
+The old homes (:mod:`repro.core.labels` / :mod:`repro.core.dtree` /
+:mod:`repro.core.rules`) remain as import shims, like
+:mod:`repro.search.evaluator`. This package never imports
+:mod:`repro.search` at runtime — the dependency points search -> rules.
+See README.md in this directory for the subsystem map and determinism
+guarantees.
+"""
+from repro.rules.boost import GradientBoostedSurrogate, OnlineSurrogateBase
+from repro.rules.labels import (Labeling, find_peaks, label_times,
+                                peak_prominences, peak_prominences_loop,
+                                step_convolve)
+from repro.rules.pipeline import RuleReport, distill
+from repro.rules.rulesets import (Rule, RuleSet, annotate_vs_canonical,
+                                  class_range_accuracy,
+                                  class_range_accuracy_loop,
+                                  extract_rulesets, render_rules_table,
+                                  rules_by_class)
+from repro.rules.trees import (DecisionTree, Presort, RegressionTree,
+                               TreeSearchTrace, algorithm1)
+
+__all__ = [
+    "GradientBoostedSurrogate", "OnlineSurrogateBase",
+    "Labeling", "find_peaks", "label_times", "peak_prominences",
+    "peak_prominences_loop", "step_convolve",
+    "RuleReport", "distill",
+    "Rule", "RuleSet", "annotate_vs_canonical", "class_range_accuracy",
+    "class_range_accuracy_loop", "extract_rulesets", "render_rules_table",
+    "rules_by_class",
+    "DecisionTree", "Presort", "RegressionTree", "TreeSearchTrace",
+    "algorithm1",
+]

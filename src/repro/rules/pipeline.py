@@ -1,0 +1,191 @@
+"""The missing end-to-end API: search result -> rendered design rules.
+
+Before this module every consumer (benchmarks/paper.py, the smoke
+pass, examples/schedule_search.py) hand-wired the same five steps:
+label the times, featurize the schedules, run Algorithm 1, extract the
+rulesets, render/annotate them. :func:`distill` is that pipeline as
+one call::
+
+    res = run_search(graph, strategy, ...)
+    report = distill(res)                      # -> RuleReport
+    print(report.render())
+    report.write("experiments/rules.md")       # explicit output path
+
+with the paper's evaluation hooks as keyword arguments: a pluggable
+``labeler`` (anything mapping times -> :class:`Labeling`), a
+``canonical`` report or ruleset list to annotate against (§V
+over/under-constraint marks), and a ``full_space`` of (schedules,
+times) for the Table-V class-range accuracy — optionally widened by
+``range_widen`` for noise-dosed measurements.
+
+``distill`` is deterministic and duck-typed: it needs only
+``.graph``, ``.schedules`` and ``.times`` from the search result, so
+any corpus (an exhaustive sweep, an MCTS subset, replayed logs) can be
+distilled without importing :mod:`repro.search`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import time
+from typing import Callable, Sequence, TYPE_CHECKING
+
+import numpy as np
+
+from repro.core.features import FeatureMatrix, featurize, featurize_like
+from repro.rules.labels import Labeling, label_times
+from repro.rules.rulesets import (RuleSet, annotate_vs_canonical,
+                                  class_range_accuracy, extract_rulesets,
+                                  render_rules_table, rules_by_class)
+from repro.rules.trees import DecisionTree, TreeSearchTrace, algorithm1
+
+if TYPE_CHECKING:  # pragma: no cover - typing only, no runtime dep
+    from repro.core.dag import Graph, Schedule
+    from repro.search.pipeline import SearchResult
+
+
+@dataclasses.dataclass
+class RuleReport:
+    """Everything the labels -> tree -> rules pipeline produced."""
+
+    graph: "Graph"
+    feature_matrix: FeatureMatrix
+    labeling: Labeling
+    tree: DecisionTree
+    trace: TreeSearchTrace
+    rulesets: list[RuleSet]
+    n_schedules: int
+    training_error: float
+    class_range_acc: float | None = None   # Table V, when full_space given
+    annotated: bool = False                # §V marks vs a canonical report
+    stage_seconds: dict = dataclasses.field(default_factory=dict)
+    """Wall seconds per pipeline stage (label/featurize/tree/rules/
+    accuracy) — so benchmark rows can keep attributing time to the
+    stage they are about."""
+
+    def grouped(self) -> dict[int, list[RuleSet]]:
+        return rules_by_class(self.rulesets)
+
+    def summary(self) -> dict:
+        """Flat stats dict (benchmark rows, smoke assertions)."""
+        out = {
+            "n_schedules": self.n_schedules,
+            "n_classes": self.labeling.n_classes,
+            "n_features": len(self.feature_matrix.features),
+            "n_rulesets": len(self.rulesets),
+            "n_leaves": self.tree.n_leaves(),
+            "tree_depth": self.tree.depth(),
+            "training_error": self.training_error,
+            "algorithm1_trials": len(self.trace.max_leaf_nodes),
+        }
+        if self.annotated:
+            out["n_overconstrained"] = sum(
+                bool(rs.extraneous) for rs in self.rulesets)
+            out["n_underconstrained"] = sum(
+                rs.insufficient for rs in self.rulesets)
+        if self.class_range_acc is not None:
+            out["class_range_acc"] = self.class_range_acc
+        return out
+
+    def render(self, top_k: int = 3) -> str:
+        """Markdown report: corpus stats, class ranges, rule tables."""
+        s = self.summary()
+        lines = [
+            "# design-rule report",
+            "",
+            f"- schedules: {s['n_schedules']} "
+            f"({s['n_features']} features, "
+            f"{s['n_classes']} performance classes)",
+            f"- tree: {s['n_leaves']} leaves, depth {s['tree_depth']}, "
+            f"training error {s['training_error']:.4f} "
+            f"({s['algorithm1_trials']} Algorithm-1 trials)",
+        ]
+        if self.class_range_acc is not None:
+            lines.append(f"- class-range accuracy (full space): "
+                         f"{self.class_range_acc:.3f}")
+        if self.annotated:
+            lines.append(
+                f"- vs canonical rules: "
+                f"{s['n_overconstrained']} overconstrained, "
+                f"{s['n_underconstrained']} underconstrained rulesets")
+        lines.append("")
+        for c, (lo, hi) in enumerate(self.labeling.class_ranges()):
+            lines.append(f"- class {c + 1} time range: "
+                         f"[{lo * 1e6:.2f}, {hi * 1e6:.2f}] us")
+        lines.append("")
+        lines.append(render_rules_table(self.grouped(), top_k=top_k))
+        return "\n".join(lines) + "\n"
+
+    def write(self, path, top_k: int = 3) -> pathlib.Path:
+        """Render to an explicit path (no hidden side-effect writes)."""
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(self.render(top_k=top_k))
+        return path
+
+
+def distill(result: "SearchResult",
+            labeler: Callable[[np.ndarray], Labeling] = label_times,
+            canonical: "RuleReport | list[RuleSet] | None" = None,
+            full_space: "tuple[Sequence[Schedule], np.ndarray] | None"
+            = None,
+            range_widen: float = 0.0,
+            initial_leaves: int | None = None) -> RuleReport:
+    """Label -> featurize -> Algorithm 1 -> rulesets, as one call.
+
+    ``labeler`` maps the observed times to a :class:`Labeling`
+    (defaults to the paper's §IV-A convolution labeling; pass e.g.
+    ``functools.partial(label_times, prominence_percentile=95)`` or any
+    custom labeler). ``canonical`` annotates the extracted rulesets
+    against a reference report's rulesets (§V). ``full_space`` is a
+    (schedules, times) pair covering the whole design space; when
+    given, the Table-V class-range accuracy is computed by classifying
+    the full space in this report's feature basis, with each class's
+    (lo, hi) time range widened to (lo*(1-w), hi*(1+w)) for
+    ``range_widen=w`` (noise-dosed measurements).
+    """
+    stage_seconds: dict[str, float] = {}
+
+    def staged(name, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        stage_seconds[name] = time.perf_counter() - t0
+        return out
+
+    times = np.asarray(result.times, dtype=np.float64)
+    labeling = staged("label", lambda: labeler(times))
+    fm = staged("featurize",
+                lambda: featurize(result.graph, result.schedules))
+    trace = TreeSearchTrace([], [], [])
+    tree = staged("tree",
+                  lambda: algorithm1(fm.X, labeling.labels, trace=trace,
+                                     initial_leaves=initial_leaves))
+    rulesets = staged("rules",
+                      lambda: extract_rulesets(tree, fm.features))
+
+    annotated = canonical is not None
+    if annotated:
+        canon_sets = canonical.rulesets \
+            if isinstance(canonical, RuleReport) else canonical
+        annotate_vs_canonical(rulesets, canon_sets)
+
+    acc = None
+    if full_space is not None:
+        space_schedules, space_times = full_space
+
+        def accuracy():
+            ranges = [(lo * (1.0 - range_widen),
+                       hi * (1.0 + range_widen))
+                      for lo, hi in labeling.class_ranges()]
+            Xf = featurize_like(result.graph, list(space_schedules), fm)
+            return class_range_accuracy(tree, Xf, space_times, ranges)
+
+        acc = staged("accuracy", accuracy)
+
+    return RuleReport(
+        graph=result.graph, feature_matrix=fm, labeling=labeling,
+        tree=tree, trace=trace, rulesets=rulesets,
+        n_schedules=len(result.schedules),
+        training_error=tree.training_error(fm.X, labeling.labels),
+        class_range_acc=acc, annotated=annotated,
+        stage_seconds=stage_seconds)

@@ -1,0 +1,902 @@
+"""Vectorized CART training — the shared tree kernel of the rules
+subsystem (paper §IV-C, Algorithm 1).
+
+This container has no scikit-learn, so we implement the subset of
+``DecisionTreeClassifier`` the paper uses: CART with gini impurity,
+``class_weight='balanced'``, ``max_leaf_nodes`` (best-first growth by
+weighted impurity decrease, like sklearn) and ``max_depth``. Tests
+cross-check against sklearn when it is importable.
+
+The split finder comes in two interchangeable implementations:
+
+``splitter="vectorized"`` (default)
+    Sort-based: every feature column is analysed **once** per dataset
+    (:class:`Presort`, reused across the whole Algorithm-1
+    ``max_leaf_nodes`` sweep and across boosting rounds) and all
+    thresholds of all features are scored per node as numpy array ops.
+    Binary features — the paper's entire §IV-B order/stream space —
+    take a matmul fast path: per node, one (rows × features) indicator
+    gather and one BLAS product against the one-hot classes yield every
+    candidate's class histogram, with no per-node sorting state at
+    all. Multi-valued features keep presorted row orders (argsorted
+    once, then *filtered* down the tree, never re-sorted) and score
+    candidates from cumulative class counts gathered only at
+    value-boundary positions.
+
+``splitter="loop"``
+    The original per-candidate Python loop (one masked histogram pair
+    per threshold), kept as the benchmark/property-test reference
+    (``benchmarks/trees_bench.py``, tests/test_rules_trees.py).
+
+Both splitters produce **bit-identical trees**: class histograms are
+computed as ``class_weight * integer_count`` (exact — never an
+order-dependent float accumulation), every reduction over the class
+axis runs in ascending class order in both implementations, and ties
+in gain resolve to the lowest (feature, threshold) candidate. The same
+kernels score variance-reduction splits for :class:`RegressionTree`,
+the base learner of :class:`repro.rules.boost.GradientBoostedSurrogate`.
+
+The tree is intentionally allowed to overfit (paper §IV-C): it
+describes the explored design space; generalization is measured
+separately (Table V).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+import numpy as np
+
+# Work-chunk size (elements of the (features x node rows) score matrix)
+# for the sorted split path: bounds peak memory without changing any
+# result (the kernel is elementwise across features).
+_FEATURE_BLOCK = 4 * 1024 * 1024
+# float32 holds integer counts exactly below 2^24; larger nodes use the
+# float64 indicator copy in the binary matmul path.
+_F32_EXACT = 1 << 24
+
+
+def _wsum(vec) -> float:
+    """Sum in ascending index order.
+
+    Both splitters reduce over the class axis with this exact
+    (sequential) order, so their per-candidate gains — and therefore
+    the trees they grow — are bit-identical; ``np.sum`` reorders by
+    memory layout and would break that.
+    """
+    tot = 0.0
+    for x in vec:
+        tot += float(x)
+    return tot
+
+
+def _gini(weighted_counts) -> float:
+    tot = _wsum(weighted_counts)
+    if tot <= 0:
+        return 0.0
+    acc = 0.0
+    for c in weighted_counts:
+        p = float(c) / tot
+        acc += p * p
+    return 1.0 - acc
+
+
+class Presort:
+    """Per-dataset feature analysis shared across tree fits.
+
+    Built once per feature matrix — the expensive O(d·n·log n) part of
+    sort-based CART — and reused by every ``train(max_leaf_nodes)``
+    trial of :func:`algorithm1` and every boosting round of a
+    gradient-boosted ensemble (only labels/residuals change between
+    those fits). Holds:
+
+    * ``order`` / ``ranks`` — per-feature stable argsort and dense
+      value ranks (equal values share a rank), restricted to the
+      multi-valued features (``nb_cols``) for node-level split scoring;
+    * ``bin_cols`` / ``bin_thr`` / ``IBf`` / ``IBd`` — the binary
+      features, their single candidate threshold (midpoint of the two
+      observed values), and the 0/1 indicator matrix of the upper
+      value in float32/float64 for exact BLAS count histograms;
+    * constant features appear in neither set — no splitter can use
+      them (the loop reference skips them the same way).
+    """
+
+    def __init__(self, X: np.ndarray):
+        X = np.asarray(X, dtype=np.float64)
+        if X.ndim != 2:
+            raise ValueError(f"X must be 2-D, got shape {X.shape}")
+        self.X = np.ascontiguousarray(X)
+        self.XT = np.ascontiguousarray(self.X.T)
+        n, d = self.X.shape
+        self.order = np.argsort(self.XT, axis=1, kind="stable") \
+            .astype(np.int32)
+        # Dense per-feature value ranks: equal values share a rank, so
+        # split-candidate boundaries are int32 comparisons instead of
+        # float64 gathers.
+        V = np.take_along_axis(self.XT, self.order, axis=1)
+        grp = np.zeros(V.shape, dtype=np.int32)
+        if n > 1:
+            np.cumsum(V[:, 1:] != V[:, :-1], axis=1, dtype=np.int32,
+                      out=grp[:, 1:])
+        self.ranks = np.empty_like(grp)
+        np.put_along_axis(self.ranks, self.order, grp, axis=1)
+
+        max_rank = self.ranks.max(axis=1) if n else \
+            np.zeros(d, dtype=np.int32)
+        self.bin_cols = np.flatnonzero(max_rank == 1)
+        self.nb_cols = np.flatnonzero(max_rank >= 2)
+        self.order_nb = np.ascontiguousarray(self.order[self.nb_cols])
+        self.ranks_nb = np.ascontiguousarray(self.ranks[self.nb_cols])
+        if self.bin_cols.size:
+            lo_v = self.XT[self.bin_cols, self.order[self.bin_cols, 0]]
+            hi_v = self.XT[self.bin_cols, self.order[self.bin_cols, -1]]
+            self.bin_thr = (lo_v + hi_v) / 2.0
+            self.IBf = (self.X[:, self.bin_cols] == hi_v[None, :]) \
+                .astype(np.float32)
+        else:
+            self.bin_thr = np.zeros(0, dtype=np.float64)
+            self.IBf = np.zeros((n, 0), dtype=np.float32)
+        self._IBd: np.ndarray | None = None
+
+    @property
+    def IBd(self) -> np.ndarray:
+        """float64 indicator copy, built on first use.
+
+        Only the regression path (and >=2^24-row classifier nodes)
+        reads it; classification-only workloads never pay the copy.
+        """
+        if self._IBd is None:
+            self._IBd = self.IBf.astype(np.float64)
+        return self._IBd
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.X.shape[1]
+
+
+def _check_presort(presort: Presort | None, X: np.ndarray) -> Presort:
+    if presort is None:
+        return Presort(X)
+    if presort.X.shape != np.shape(X):
+        raise ValueError(
+            f"presort built for shape {presort.X.shape}, got "
+            f"{np.shape(X)}")
+    return presort
+
+
+@dataclasses.dataclass
+class TreeNode:
+    node_id: int
+    depth: int
+    indices: np.ndarray                  # training rows in this node
+    value: np.ndarray                    # weighted class counts
+    n_samples: int
+    feature: int | None = None           # split feature (None = leaf)
+    threshold: float = 0.5
+    left: "TreeNode | None" = None
+    right: "TreeNode | None" = None
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.feature is None
+
+    def majority_class(self) -> int:
+        return int(np.argmax(self.value))
+
+
+@dataclasses.dataclass
+class _Candidate:
+    gain: float
+    feature: int
+    threshold: float
+    left_idx: np.ndarray
+    right_idx: np.ndarray
+    left_value: np.ndarray
+    right_value: np.ndarray
+
+
+# -- split scoring -----------------------------------------------------------
+
+def _best_split_loop(ps: Presort, y_enc: np.ndarray, class_w: np.ndarray,
+                     idx: np.ndarray, parent_imp: float,
+                     tot_w: float) -> tuple[float, int, float] | None:
+    """Reference split finder: one histogram pair per candidate."""
+    K = len(class_w)
+    Xn = ps.X[idx]
+    yn = y_enc[idx]
+    best: tuple[float, int, float] | None = None
+    for f in range(Xn.shape[1]):
+        col = Xn[:, f]
+        vals = np.unique(col)
+        if len(vals) < 2:
+            continue
+        for j in range(len(vals) - 1):
+            t = (vals[j] + vals[j + 1]) / 2.0
+            mask = col <= t
+            lv = class_w * np.bincount(yn[mask], minlength=K)
+            rv = class_w * np.bincount(yn[~mask], minlength=K)
+            lw, rw = _wsum(lv), _wsum(rv)
+            child = (lw * _gini(lv) + rw * _gini(rv)) / tot_w
+            gain = tot_w * (parent_imp - child)
+            if best is None or gain > best[0]:
+                best = (gain, f, float(t))
+    return best
+
+
+def _gini_gains(left_counts: list[np.ndarray],
+                right_counts: list[np.ndarray], class_w: np.ndarray,
+                parent_imp: float, tot_w: float) -> np.ndarray:
+    """Per-candidate weighted impurity decrease from integer counts.
+
+    Two passes over the (small) class axis, both in ascending class
+    order: first the left/right total weights, then the gini sums of
+    squares (which need the totals) — the exact op order of the loop
+    reference's scalar math, applied elementwise.
+    """
+    K = len(class_w)
+    Lw: list[np.ndarray] = []
+    Rw: list[np.ndarray] = []
+    lw = rw = None
+    for k in range(K):
+        l_k = class_w[k] * left_counts[k]
+        r_k = class_w[k] * right_counts[k]
+        Lw.append(l_k)
+        Rw.append(r_k)
+        lw = l_k if lw is None else lw + l_k
+        rw = r_k if rw is None else rw + r_k
+    lacc = racc = None
+    for k in range(K):
+        p = Lw[k] / lw
+        q = Rw[k] / rw
+        lacc = p * p if lacc is None else lacc + p * p
+        racc = q * q if racc is None else racc + q * q
+    child = (lw * (1.0 - lacc) + rw * (1.0 - racc)) / tot_w
+    return tot_w * (parent_imp - child)
+
+
+def _best_split_binary(ps: Presort, y_enc: np.ndarray,
+                       class_w: np.ndarray, idx: np.ndarray,
+                       tcnt: np.ndarray, parent_imp: float,
+                       tot_w: float) -> tuple[float, int, float] | None:
+    """All binary features of a node in one BLAS product.
+
+    The class histogram right of every binary feature's single
+    threshold is ``indicator.T @ onehot(classes)`` — integer counts,
+    exact in float32 below 2^24 rows — and the left histogram is the
+    node total minus it. No sorting state is touched.
+    """
+    m = idx.size
+    K = len(class_w)
+    IB = ps.IBf if m < _F32_EXACT else ps.IBd
+    In = IB if m == IB.shape[0] else np.take(IB, idx, axis=0)
+    oh = np.zeros((m, K), dtype=IB.dtype)
+    oh[np.arange(m), y_enc[idx]] = 1.0
+    rcnt = (In.T @ oh).astype(np.int64)              # (d_bin, K) exact
+    nright = rcnt.sum(axis=1)
+    valid = (nright > 0) & (nright < m)
+    if not valid.any():
+        return None
+    left_counts = [tcnt[k] - rcnt[:, k] for k in range(K)]
+    right_counts = [rcnt[:, k] for k in range(K)]
+    with np.errstate(invalid="ignore", divide="ignore"):
+        # node-constant features divide by an empty side; masked below
+        gains = _gini_gains(left_counts, right_counts, class_w,
+                            parent_imp, tot_w)
+    gains[~valid] = -np.inf
+    i = int(np.argmax(gains))            # first max: lowest feature id
+    return (float(gains[i]), int(ps.bin_cols[i]), float(ps.bin_thr[i]))
+
+
+def _best_split_sorted(ps: Presort, y_enc: np.ndarray,
+                       class_w: np.ndarray, no: np.ndarray,
+                       tcnt: np.ndarray, parent_imp: float,
+                       tot_w: float) -> tuple[float, int, float] | None:
+    """Multi-valued features: score every threshold from presorted rows.
+
+    ``no`` is the (d_nb, m) matrix of this node's row indices,
+    presorted per feature (filtered down from :attr:`Presort.order_nb`,
+    never re-sorted). Candidate thresholds sit between consecutive
+    distinct sorted values (int32 rank comparisons); gains are
+    evaluated **only at those boundary positions** (flat-indexed) from
+    cumulative integer class counts.
+    """
+    d, m = no.shape
+    if d == 0 or m < 2:
+        return None
+    K = len(class_w)
+    best: tuple[float, int, float] | None = None
+    block = max(1, _FEATURE_BLOCK // m)
+    for lo in range(0, d, block):
+        o = no[lo:lo + block]
+        RV = np.take_along_axis(ps.ranks_nb[lo:lo + block], o, axis=1)
+        boundary = RV[:, :-1] != RV[:, 1:]
+        ridx = np.flatnonzero(boundary.any(axis=1))  # non-constant here
+        if ridx.size == 0:
+            continue
+        ov = o[ridx]
+        rows, cols = np.nonzero(boundary[ridx])      # feature-major order
+        C = y_enc[ov]
+        # Integer left counts per class at the candidates; the last
+        # class is implied (left size minus the others) — all exact.
+        left_counts: list[np.ndarray] = []
+        csum = None
+        for k in range(K - 1):
+            cnt = np.cumsum(C == k, axis=1, dtype=np.int32)[rows, cols]
+            left_counts.append(cnt)
+            csum = cnt.astype(np.int64) if csum is None else csum + cnt
+        left_counts.append(cols + 1 - csum)          # left sizes - rest
+        right_counts = [tcnt[k] - left_counts[k] for k in range(K)]
+        gains = _gini_gains(left_counts, right_counts, class_w,
+                            parent_imp, tot_w)
+        i = int(np.argmax(gains))        # first max: lowest (f, t) wins
+        g = float(gains[i])
+        if best is None or g > best[0]:  # strict: earlier chunk wins ties
+            fa = lo + int(ridx[rows[i]])     # chunk-local -> nb-global
+            pos = int(cols[i])
+            a = ps.XT[ps.nb_cols[fa], ov[rows[i], pos]]
+            b = ps.XT[ps.nb_cols[fa], ov[rows[i], pos + 1]]
+            best = (g, int(ps.nb_cols[fa]), float((a + b) / 2.0))
+    return best
+
+
+def _merge_candidates(a: tuple[float, int, float] | None,
+                      b: tuple[float, int, float] | None
+                      ) -> tuple[float, int, float] | None:
+    """Best of two per-path candidates, loop-ordered on exact ties.
+
+    The loop reference walks features in ascending global index and
+    only replaces on strictly larger gain, so an exact tie between the
+    binary and sorted paths resolves to the lower feature index.
+    """
+    if a is None:
+        return b
+    if b is None:
+        return a
+    if a[0] != b[0]:
+        return a if a[0] > b[0] else b
+    return a if a[1] < b[1] else b
+
+
+# -- regression (variance-reduction) scoring ---------------------------------
+
+def _best_split_reg_binary(ps: Presort, y: np.ndarray, idx: np.ndarray,
+                           parent_sse: float, s: float,
+                           ss: float) -> tuple[float, int, float] | None:
+    m = idx.size
+    In = ps.IBd if m == ps.IBd.shape[0] \
+        else np.take(ps.IBd, idx, axis=0)
+    yn = y if m == ps.IBd.shape[0] else y[idx]
+    nr = In.sum(axis=0)
+    valid = (nr > 0) & (nr < m)
+    if not valid.any():
+        return None
+    sr = yn @ In
+    ssr = (yn * yn) @ In
+    nl = m - nr
+    sl = s - sr
+    with np.errstate(invalid="ignore", divide="ignore"):
+        sse_l = (ss - ssr) - sl * sl / nl
+        sse_r = ssr - sr * sr / nr
+        gains = parent_sse - sse_l - sse_r
+    gains[~valid] = -np.inf
+    i = int(np.argmax(gains))
+    return (float(gains[i]), int(ps.bin_cols[i]), float(ps.bin_thr[i]))
+
+
+def _best_split_reg_sorted(ps: Presort, y: np.ndarray, no: np.ndarray,
+                           parent_sse: float, s: float,
+                           ss: float) -> tuple[float, int, float] | None:
+    d, m = no.shape
+    if d == 0 or m < 2:
+        return None
+    best: tuple[float, int, float] | None = None
+    block = max(1, _FEATURE_BLOCK // m)
+    for lo in range(0, d, block):
+        o = no[lo:lo + block]
+        RV = np.take_along_axis(ps.ranks_nb[lo:lo + block], o, axis=1)
+        boundary = RV[:, :-1] != RV[:, 1:]
+        ridx = np.flatnonzero(boundary.any(axis=1))
+        if ridx.size == 0:
+            continue
+        ov = o[ridx]
+        rows, cols = np.nonzero(boundary[ridx])
+        Y = y[ov]
+        ls = np.cumsum(Y, axis=1)[rows, cols]
+        lss = np.cumsum(Y * Y, axis=1)[rows, cols]
+        cl = (cols + 1).astype(np.float64)
+        sse_l = lss - ls * ls / cl
+        sse_r = (ss - lss) - (s - ls) ** 2 / (m - cl)
+        gains = parent_sse - sse_l - sse_r
+        i = int(np.argmax(gains))
+        g = float(gains[i])
+        if best is None or g > best[0]:
+            fa = lo + int(ridx[rows[i]])     # chunk-local -> nb-global
+            pos = int(cols[i])
+            a = ps.XT[ps.nb_cols[fa], ov[rows[i], pos]]
+            b = ps.XT[ps.nb_cols[fa], ov[rows[i], pos + 1]]
+            best = (g, int(ps.nb_cols[fa]), float((a + b) / 2.0))
+    return best
+
+
+# -- shared growth machinery -------------------------------------------------
+
+def _partition_sorted(parent_no: np.ndarray, left_idx: np.ndarray,
+                      n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Split a node's presorted row matrix between its children.
+
+    A stable boolean filter of each presorted row preserves the sort,
+    so children never pay another argsort.
+    """
+    mask = np.zeros(n, dtype=bool)
+    mask[left_idx] = True
+    sel = mask[parent_no]
+    d = parent_no.shape[0]
+    return (parent_no[sel].reshape(d, -1),
+            parent_no[~sel].reshape(d, -1))
+
+
+def _flatten(root, leaf_value) -> tuple[np.ndarray, ...]:
+    """Preorder array form of a tree for vectorized batch descent.
+
+    Leaves self-loop (``left == right == own slot``), so descent can
+    run a fixed number of rounds without an activity mask.
+    """
+    nodes: list = []
+
+    def walk(nd) -> None:
+        nodes.append(nd)
+        if nd.feature is not None:
+            walk(nd.left)
+            walk(nd.right)
+
+    walk(root)
+    slot = {id(nd): i for i, nd in enumerate(nodes)}
+    size = len(nodes)
+    feat = np.full(size, -1, dtype=np.int64)
+    thr = np.zeros(size, dtype=np.float64)
+    left = np.arange(size, dtype=np.int64)
+    right = np.arange(size, dtype=np.int64)
+    val = np.zeros(size, dtype=np.float64)
+    for i, nd in enumerate(nodes):
+        if nd.feature is not None:
+            feat[i] = nd.feature
+            thr[i] = nd.threshold
+            left[i] = slot[id(nd.left)]
+            right[i] = slot[id(nd.right)]
+        else:
+            val[i] = leaf_value(nd)
+    return feat, thr, left, right, val
+
+
+def _descend(flat: tuple[np.ndarray, ...], X: np.ndarray) -> np.ndarray:
+    """Leaf slot per row of ``X`` (vectorized batch traversal)."""
+    feat, thr, left, right, _ = flat
+    cur = np.zeros(len(X), dtype=np.int64)
+    rows = np.arange(len(X))
+    while True:
+        f = feat[cur]
+        active = f >= 0
+        if not active.any():
+            return cur
+        xv = X[rows, np.where(active, f, 0)]
+        nxt = np.where(xv <= thr[cur], left[cur], right[cur])
+        cur = np.where(active, nxt, cur)
+
+
+class DecisionTree:
+    """CART classifier (gini, balanced class weights, best-first growth).
+
+    ``splitter="vectorized"`` (default) and ``splitter="loop"`` grow
+    bit-identical trees; the former scores all candidate splits with
+    numpy/BLAS array ops over a :class:`Presort` analysis. Pass a
+    shared ``presort`` to ``fit`` to amortize that analysis across
+    fits on the same feature matrix.
+    """
+
+    _SPLITTERS = ("vectorized", "loop")
+
+    def __init__(self, max_leaf_nodes: int, max_depth: int | None = None,
+                 splitter: str = "vectorized"):
+        if max_leaf_nodes < 2:
+            raise ValueError("max_leaf_nodes must be >= 2")
+        if splitter not in self._SPLITTERS:
+            raise ValueError(f"splitter must be one of {self._SPLITTERS}")
+        self.max_leaf_nodes = max_leaf_nodes
+        self.max_depth = max_depth
+        self.splitter = splitter
+        self.root: TreeNode | None = None
+        self.n_classes = 0
+        self.classes_: np.ndarray | None = None
+        self._flat: tuple[np.ndarray, ...] | None = None
+
+    # -- fitting ----------------------------------------------------------
+    def fit(self, X: np.ndarray, y: np.ndarray,
+            presort: Presort | None = None,
+            split_cache: dict | None = None) -> "DecisionTree":
+        """Fit on (X, y); see the class docstring.
+
+        ``split_cache`` memoizes best-split candidates by node row-set
+        across fits on the **same (X, y)** — a node's best split does
+        not depend on ``max_leaf_nodes``/``max_depth``, so the
+        Algorithm-1 sweep passes one dict and every re-trial reuses the
+        shallow splits it already scored. Never share a cache across
+        different data.
+        """
+        ps = _check_presort(presort, X)
+        y = np.asarray(y)
+        if len(y) != ps.n:
+            raise ValueError(f"X has {ps.n} rows but y has {len(y)}")
+        self.classes_, y_enc = np.unique(y, return_inverse=True)
+        y_enc = y_enc.astype(np.int32)       # halves per-node gathers
+        self.n_classes = K = len(self.classes_)
+        n = ps.n
+        # class_weight='balanced': w_c = n / (k * n_c)
+        counts = np.bincount(y_enc, minlength=K)
+        class_w = np.where(counts > 0,
+                           n / (K * np.maximum(counts, 1)), 0.0)
+        vectorized = self.splitter == "vectorized"
+        track_sorted = vectorized and ps.nb_cols.size > 0
+
+        ids = itertools.count()
+        all_idx = np.arange(n)
+        self.root = TreeNode(next(ids), 0, all_idx,
+                             class_w * counts, n_samples=n)
+        sorted_rows: dict[int, np.ndarray] = {}
+        if track_sorted:
+            sorted_rows[self.root.node_id] = ps.order_nb
+
+        def best_split(node: TreeNode) -> _Candidate | None:
+            idx = node.indices
+            if len(idx) < 2:
+                return None
+            key = idx.tobytes() if split_cache is not None else None
+            if key is not None and key in split_cache:
+                return split_cache[key]
+            parent_imp = _gini(node.value)
+            if parent_imp == 0.0:
+                return None
+            tot_w = _wsum(node.value)
+            if vectorized:
+                tcnt = np.bincount(y_enc[idx], minlength=K)
+                res = None
+                if ps.bin_cols.size:
+                    res = _best_split_binary(ps, y_enc, class_w, idx,
+                                             tcnt, parent_imp, tot_w)
+                if track_sorted:
+                    res = _merge_candidates(res, _best_split_sorted(
+                        ps, y_enc, class_w, sorted_rows[node.node_id],
+                        tcnt, parent_imp, tot_w))
+            else:
+                res = _best_split_loop(ps, y_enc, class_w, idx,
+                                       parent_imp, tot_w)
+            # Zero-gain splits are allowed (CART/sklearn semantics):
+            # XOR-style labels need a gainless first split to become
+            # separable; max_leaf_nodes bounds growth.
+            cand = None
+            if res is not None and res[0] >= -1e-12:
+                gain, f, thr = res
+                went = ps.X[idx, f] <= thr
+                li, ri = idx[went], idx[~went]
+                lv = class_w * np.bincount(y_enc[li], minlength=K)
+                rv = class_w * np.bincount(y_enc[ri], minlength=K)
+                cand = _Candidate(gain, f, thr, li, ri, lv, rv)
+            if key is not None:
+                split_cache[key] = cand
+            return cand
+
+        # Best-first growth: split the frontier leaf with the largest
+        # impurity-decrease until max_leaf_nodes is reached.
+        heap: list[tuple[float, int, TreeNode, _Candidate]] = []
+
+        def push(node: TreeNode) -> None:
+            if self.max_depth is not None and node.depth >= self.max_depth:
+                sorted_rows.pop(node.node_id, None)
+                return
+            cand = best_split(node)
+            if cand is None:
+                sorted_rows.pop(node.node_id, None)
+                return
+            heapq.heappush(heap, (-cand.gain, node.node_id, node, cand))
+
+        push(self.root)
+        n_leaves = 1
+        while heap and n_leaves < self.max_leaf_nodes:
+            _, _, node, cand = heapq.heappop(heap)
+            node.feature = cand.feature
+            node.threshold = cand.threshold
+            node.left = TreeNode(next(ids), node.depth + 1, cand.left_idx,
+                                 cand.left_value, len(cand.left_idx))
+            node.right = TreeNode(next(ids), node.depth + 1, cand.right_idx,
+                                  cand.right_value, len(cand.right_idx))
+            n_leaves += 1
+            if track_sorted:
+                lno, rno = _partition_sorted(
+                    sorted_rows.pop(node.node_id), cand.left_idx, n)
+                sorted_rows[node.left.node_id] = lno
+                sorted_rows[node.right.node_id] = rno
+            push(node.left)
+            push(node.right)
+        sorted_rows.clear()
+        self._flat = None
+        return self
+
+    # -- inference ----------------------------------------------------------
+    def _leaf(self, x: np.ndarray) -> TreeNode:
+        node = self.root
+        assert node is not None, "tree not fitted"
+        while not node.is_leaf:
+            node = node.left if x[node.feature] <= node.threshold \
+                else node.right
+        return node
+
+    def _flatten(self) -> tuple[np.ndarray, ...]:
+        if self._flat is None:
+            assert self.root is not None, "tree not fitted"
+            self._flat = _flatten(self.root,
+                                  lambda nd: float(nd.majority_class()))
+        return self._flat
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        """Class label per row — one vectorized descent for the batch."""
+        X = np.asarray(X, dtype=np.float64)
+        flat = self._flatten()
+        slots = _descend(flat, X)
+        return self.classes_[flat[4][slots].astype(np.int64)]
+
+    def training_error(self, X: np.ndarray, y: np.ndarray) -> float:
+        return float(np.mean(self.predict(X) != np.asarray(y)))
+
+    # -- structure ----------------------------------------------------------
+    def leaves(self) -> list[TreeNode]:
+        out: list[TreeNode] = []
+
+        def walk(node: TreeNode) -> None:
+            if node.is_leaf:
+                out.append(node)
+            else:
+                walk(node.left)
+                walk(node.right)
+
+        if self.root is not None:
+            walk(self.root)
+        return out
+
+    def depth(self) -> int:
+        def d(node: TreeNode) -> int:
+            if node.is_leaf:
+                return node.depth
+            return max(d(node.left), d(node.right))
+        return d(self.root) if self.root is not None else 0
+
+    def n_leaves(self) -> int:
+        return len(self.leaves())
+
+    def paths(self) -> list[tuple[list[tuple[int, float, bool]], TreeNode]]:
+        """All (path, leaf) pairs; path = [(feature, threshold, went_right)]."""
+        out = []
+
+        def walk(node: TreeNode, path):
+            if node.is_leaf:
+                out.append((list(path), node))
+                return
+            walk(node.left, path + [(node.feature, node.threshold, False)])
+            walk(node.right, path + [(node.feature, node.threshold, True)])
+
+        if self.root is not None:
+            walk(self.root, [])
+        return out
+
+
+# -- regression trees (boosting base learner) --------------------------------
+
+@dataclasses.dataclass
+class RegressionNode:
+    node_id: int
+    depth: int
+    indices: np.ndarray
+    mean: float
+    sse: float
+    n_samples: int
+    feature: int | None = None
+    threshold: float = 0.5
+    left: "RegressionNode | None" = None
+    right: "RegressionNode | None" = None
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.feature is None
+
+
+@dataclasses.dataclass
+class _RegCandidate:
+    gain: float
+    feature: int
+    threshold: float
+    left_idx: np.ndarray
+    right_idx: np.ndarray
+
+
+class RegressionTree:
+    """Least-squares CART on the same vectorized split kernels.
+
+    Best-first growth by SSE reduction under ``max_leaf_nodes`` /
+    ``max_depth``; leaf prediction is the mean target. The base
+    learner of :class:`repro.rules.boost.GradientBoostedSurrogate` —
+    every boosting round refits on new residuals but shares one
+    :class:`Presort` (the feature matrix never changes).
+    """
+
+    def __init__(self, max_leaf_nodes: int = 8,
+                 max_depth: int | None = None, min_gain: float = 1e-12):
+        if max_leaf_nodes < 2:
+            raise ValueError("max_leaf_nodes must be >= 2")
+        self.max_leaf_nodes = max_leaf_nodes
+        self.max_depth = max_depth
+        self.min_gain = min_gain
+        self.root: RegressionNode | None = None
+        self._flat: tuple[np.ndarray, ...] | None = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray,
+            presort: Presort | None = None) -> "RegressionTree":
+        ps = _check_presort(presort, X)
+        y = np.asarray(y, dtype=np.float64)
+        if len(y) != ps.n:
+            raise ValueError(f"X has {ps.n} rows but y has {len(y)}")
+        n = ps.n
+        track_sorted = ps.nb_cols.size > 0
+
+        def stats(idx: np.ndarray) -> tuple[float, float, float]:
+            yi = y[idx]
+            s = float(yi.sum())
+            ss = float((yi * yi).sum())
+            return s, ss, max(0.0, ss - s * s / max(1, len(idx)))
+
+        ids = itertools.count()
+        all_idx = np.arange(n)
+        s0, ss0, sse0 = stats(all_idx)
+        self.root = RegressionNode(next(ids), 0, all_idx,
+                                   s0 / max(1, n), sse0, n)
+        sorted_rows: dict[int, np.ndarray] = {}
+        if track_sorted:
+            sorted_rows[self.root.node_id] = ps.order_nb
+
+        def best_split(node: RegressionNode) -> _RegCandidate | None:
+            idx = node.indices
+            if len(idx) < 2 or node.sse <= self.min_gain:
+                return None
+            s, ss, sse = stats(idx)
+            res = None
+            if ps.bin_cols.size:
+                res = _best_split_reg_binary(ps, y, idx, sse, s, ss)
+            if track_sorted:
+                res = _merge_candidates(res, _best_split_reg_sorted(
+                    ps, y, sorted_rows[node.node_id], sse, s, ss))
+            if res is None or res[0] <= self.min_gain:
+                return None
+            gain, f, thr = res
+            went = ps.X[idx, f] <= thr
+            return _RegCandidate(gain, f, thr, idx[went], idx[~went])
+
+        heap: list[tuple[float, int, RegressionNode, _RegCandidate]] = []
+
+        def push(node: RegressionNode) -> None:
+            if self.max_depth is not None and node.depth >= self.max_depth:
+                sorted_rows.pop(node.node_id, None)
+                return
+            cand = best_split(node)
+            if cand is None:
+                sorted_rows.pop(node.node_id, None)
+                return
+            heapq.heappush(heap, (-cand.gain, node.node_id, node, cand))
+
+        push(self.root)
+        n_leaves = 1
+        while heap and n_leaves < self.max_leaf_nodes:
+            _, _, node, cand = heapq.heappop(heap)
+            node.feature = cand.feature
+            node.threshold = cand.threshold
+            for attr, ci in (("left", cand.left_idx),
+                             ("right", cand.right_idx)):
+                s, ss, sse = stats(ci)
+                setattr(node, attr,
+                        RegressionNode(next(ids), node.depth + 1, ci,
+                                       s / len(ci), sse, len(ci)))
+            n_leaves += 1
+            if track_sorted:
+                lno, rno = _partition_sorted(
+                    sorted_rows.pop(node.node_id), cand.left_idx, n)
+                sorted_rows[node.left.node_id] = lno
+                sorted_rows[node.right.node_id] = rno
+            push(node.left)
+            push(node.right)
+        sorted_rows.clear()
+        self._flat = None
+        return self
+
+    def _flatten(self) -> tuple[np.ndarray, ...]:
+        if self._flat is None:
+            assert self.root is not None, "tree not fitted"
+            self._flat = _flatten(self.root, lambda nd: nd.mean)
+        return self._flat
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, dtype=np.float64)
+        flat = self._flatten()
+        return flat[4][_descend(flat, X)]
+
+    def n_leaves(self) -> int:
+        def count(nd: RegressionNode) -> int:
+            if nd.is_leaf:
+                return 1
+            return count(nd.left) + count(nd.right)
+        return count(self.root) if self.root is not None else 0
+
+    def depth(self) -> int:
+        def d(nd: RegressionNode) -> int:
+            if nd.is_leaf:
+                return nd.depth
+            return max(d(nd.left), d(nd.right))
+        return d(self.root) if self.root is not None else 0
+
+
+# -- the paper's Algorithm 1 -------------------------------------------------
+
+@dataclasses.dataclass
+class TreeSearchTrace:
+    max_leaf_nodes: list[float]
+    errors: list[float]
+    depths: list[int]
+
+
+def algorithm1(X: np.ndarray, y: np.ndarray,
+               initial_leaves: int | None = None,
+               trace: TreeSearchTrace | None = None,
+               presort: Presort | None = None,
+               splitter: str = "vectorized") -> DecisionTree:
+    """Paper Algorithm 1: grow max_leaf_nodes until error stops shrinking.
+
+    ``train(mln)`` fits a tree with max_leaf_nodes=mln and
+    max_depth=mln-1. Starting leaf count = number of classes (the paper's
+    listing initialises with 2; we use max(2, n_classes) per §IV-C text).
+
+    Warm start: the per-feature sort/arity analysis (:class:`Presort`)
+    is computed once and reused by every trial of the sweep — the
+    feature matrix is the same; only ``max_leaf_nodes`` moves — and
+    the trials share a split cache, so a re-trial only scores the
+    frontier nodes its predecessors never reached. Pass ``presort`` to
+    share the analysis even further (e.g. with a boosted surrogate on
+    the same matrix).
+    """
+    ps = _check_presort(presort, X)
+    n_classes = len(np.unique(y))
+    mln = initial_leaves if initial_leaves is not None \
+        else max(2, n_classes)
+    split_cache: dict = {}
+
+    def train(k: int) -> tuple[float, DecisionTree]:
+        t = DecisionTree(max_leaf_nodes=k, max_depth=k - 1,
+                         splitter=splitter).fit(ps.X, y, presort=ps,
+                                                split_cache=split_cache)
+        e = t.training_error(ps.X, y)
+        if trace is not None:
+            trace.max_leaf_nodes.append(k)
+            trace.errors.append(e)
+            trace.depths.append(t.depth())
+        return e, t
+
+    err, clf = train(mln)
+    improved = True
+    while improved and err > 0.0:
+        improved = False
+        for i in range(1, 6):
+            cur, nclf = train(mln + i)
+            if cur < err:
+                err, clf, mln = cur, nclf, mln + i
+                improved = True
+                break
+    return clf

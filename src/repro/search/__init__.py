@@ -19,8 +19,10 @@ from repro.search.pipeline import SearchResult, run_search
 from repro.search.strategy import (ExhaustiveSearch, GreedyCostModel,
                                    RandomSearch, SearchStrategy,
                                    eligible_items, random_schedule)
-from repro.search.surrogate import (PortfolioSearch, RidgeSurrogate,
-                                    SurrogateGuided, spearman)
+from repro.search.surrogate import (SURROGATES, GradientBoostedSurrogate,
+                                    PortfolioSearch, RidgeSurrogate,
+                                    SurrogateGuided, make_surrogate,
+                                    register_surrogate, spearman)
 
 __all__ = [
     "BACKENDS", "BatchEvaluator", "EvaluatorBase", "ExecutorEvaluator",
@@ -30,5 +32,7 @@ __all__ = [
     "SearchResult", "run_search",
     "ExhaustiveSearch", "GreedyCostModel", "RandomSearch",
     "SearchStrategy", "eligible_items", "random_schedule",
-    "PortfolioSearch", "RidgeSurrogate", "SurrogateGuided", "spearman",
+    "SURROGATES", "GradientBoostedSurrogate", "PortfolioSearch",
+    "RidgeSurrogate", "SurrogateGuided", "make_surrogate",
+    "register_surrogate", "spearman",
 ]

@@ -5,10 +5,11 @@
 (examples/schedule_search.py): it drives any :class:`SearchStrategy`
 against any evaluation-engine backend (:mod:`repro.engine` —
 serial/vectorized/pool/wallclock, selected with ``backend=``) and
-collects the deduplicated (schedule, time) observations. ``SearchResult.dataset()`` then emits the
-(features, labels, times) triple consumed by the learning stack
-(:mod:`repro.core.labels` / :mod:`repro.core.dtree` /
-:mod:`repro.core.rules`).
+collects the deduplicated (schedule, time) observations.
+``SearchResult.dataset()`` then emits the (features, labels, times)
+triple consumed by the rules distillation subsystem
+(:mod:`repro.rules`) — or pass the whole result to
+:func:`repro.rules.distill` for the one-call search -> rules report.
 """
 from __future__ import annotations
 

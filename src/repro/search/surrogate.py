@@ -14,11 +14,20 @@ simulation; the surrogate only decides *which* proposals are worth it.
     (schedule, time) pairs via the incremental
     :class:`repro.core.features.FeatureBasis` (new schedules are
     absorbed without re-expanding the corpus).
+  * The **surrogate registry** — :func:`make_surrogate` /
+    :func:`register_surrogate` resolve surrogate models by name behind
+    one protocol (``observe`` / ``predict`` / ``n_observations``,
+    shared via :class:`repro.rules.boost.OnlineSurrogateBase`).
+    Built-ins: ``"ridge"`` (here) and ``"boost"``
+    (:class:`repro.rules.boost.GradientBoostedSurrogate`, regression
+    trees on the same features — the nonlinear upgrade for spaces
+    where makespan depends on feature interactions).
   * :class:`SurrogateGuided` — generates a candidate pool (uniform
     rollouts + elite prefix mutations through ``eligible_items``),
-    scores the pool with the surrogate, and proposes only the argmin
-    top-k. Every screened→simulated pair is logged, so screening
-    quality (Spearman rank correlation, relative error) is reportable.
+    scores the pool with the surrogate (``surrogate="ridge"|"boost"``
+    or any protocol object), and proposes only the argmin top-k. Every
+    screened→simulated pair is logged, so screening quality (Spearman
+    rank correlation, relative error) is reportable.
   * :class:`PortfolioSearch` — greedy seeding → MCTS refinement →
     surrogate-guided exploitation behind the plain strategy protocol,
     the ROADMAP recipe for the at-scale spaces.
@@ -31,7 +40,8 @@ import numpy as np
 
 from repro.core.costmodel import Machine
 from repro.core.dag import BoundOp, Graph, Schedule
-from repro.core.features import Feature, FeatureBasis, apply_features
+from repro.core.features import Feature, apply_features
+from repro.rules.boost import GradientBoostedSurrogate, OnlineSurrogateBase
 from repro.search.evaluator import canonical_key
 from repro.search.mcts import MCTSSearch
 from repro.search.strategy import (GreedyCostModel, eligible_items,
@@ -66,52 +76,27 @@ def spearman(a, b) -> float:
     return float((ra * rb).sum() / denom)
 
 
-# -- the surrogate model -----------------------------------------------------
+# -- the surrogate models ----------------------------------------------------
 
-class RidgeSurrogate:
+class RidgeSurrogate(OnlineSurrogateBase):
     """Online ridge regression over order/stream feature vectors.
 
-    Observations accumulate into an incremental
-    :class:`~repro.core.features.FeatureBasis`; the model is refit
-    lazily (on the first ``predict`` once ``refit_every`` new
-    observations have landed since the last fit) by solving the
-    regularized normal equations on the constant-pruned feature matrix
-    — in the dual (n×n) form when there are more features than
+    Corpus bookkeeping and lazy geometric-backoff refits come from
+    :class:`~repro.rules.boost.OnlineSurrogateBase`; the fit solves
+    the regularized normal equations on the constant-pruned feature
+    matrix — in the dual (n×n) form when there are more features than
     observations, so wide spaces like ``halo3d_dag`` stay cheap. With
     no (or degenerate) data it predicts the observed mean.
     """
 
     def __init__(self, graph: Graph, l2: float = 1e-3,
                  refit_every: int = 8):
-        self.graph = graph
+        super().__init__(graph, refit_every=refit_every)
         self.l2 = l2
-        self.refit_every = max(1, refit_every)
-        self.basis = FeatureBasis(graph)
-        self._times: list[float] = []
-        self._fitted_n = -1          # observation count at last fit
         self._features: list[Feature] = []
         self._w: np.ndarray | None = None
         self._x_mean: np.ndarray | None = None
         self._y_mean = 0.0
-
-    @property
-    def n_observations(self) -> int:
-        return len(self._times)
-
-    def observe(self, schedule: Schedule, time: float) -> None:
-        self.basis.add([schedule])
-        self._times.append(float(time))
-
-    def _stale(self) -> bool:
-        # Geometric backoff past the floor: each refit rebuilds the
-        # matrix for the whole corpus, so refitting every k
-        # observations would make cumulative featurization cost
-        # quadratic on long runs. Waiting for ~25% corpus growth keeps
-        # it linear (amortized) while the model stays fresh.
-        if self._fitted_n < 0:
-            return True
-        wait = max(self.refit_every, self._fitted_n // 4)
-        return len(self._times) - self._fitted_n >= wait
 
     def _fit(self) -> None:
         self._fitted_n = len(self._times)
@@ -148,6 +133,39 @@ class RidgeSurrogate:
         return self._y_mean + (X - self._x_mean) @ self._w
 
 
+# -- the surrogate registry --------------------------------------------------
+
+SURROGATES: dict[str, type] = {}
+"""Registry of surrogate factories: name -> ``cls(graph, **kwargs)``."""
+
+
+def register_surrogate(name: str, factory: type) -> None:
+    """Add a surrogate model to the :data:`SURROGATES` registry.
+
+    Factories are called as ``factory(graph, **kwargs)`` and must
+    return an object with the online-surrogate protocol:
+    ``observe(schedule, time)``, ``predict(schedules) -> np.ndarray``,
+    and ``n_observations``.
+    """
+    SURROGATES[name] = factory
+
+
+register_surrogate("ridge", RidgeSurrogate)
+register_surrogate("boost", GradientBoostedSurrogate)
+
+
+def make_surrogate(graph: Graph, surrogate: str = "ridge",
+                   **kwargs):
+    """Construct a surrogate model by registry name."""
+    try:
+        factory = SURROGATES[surrogate]
+    except KeyError:
+        raise ValueError(
+            f"unknown surrogate {surrogate!r}; registered: "
+            f"{sorted(SURROGATES)}") from None
+    return factory(graph, **kwargs)
+
+
 # -- the two-stage strategy --------------------------------------------------
 
 class SurrogateGuided:
@@ -167,12 +185,22 @@ class SurrogateGuided:
     uniform rollouts (there is nothing to fit yet). Every prediction
     that reaches simulation is logged in ``screen_log`` as
     (predicted, simulated); :meth:`screening_quality` summarizes it.
+
+    ``surrogate`` selects the screening model: a :data:`SURROGATES`
+    registry name (``"ridge"`` default, ``"boost"`` for the
+    gradient-boosted trees) with ``surrogate_kwargs`` forwarded to its
+    factory, or a pre-built object implementing the protocol. The
+    legacy ``refit_every`` argument forwards to any named surrogate
+    (both built-ins share it via ``OnlineSurrogateBase``); ``l2`` is
+    ridge-only and raises if combined with another name — never
+    silently dropped.
     """
 
     def __init__(self, graph: Graph, n_streams: int, seed: int = 0,
                  warmup: int = 32, pool_factor: int = 10,
                  elite_frac: float = 0.25, mutation_prob: float = 0.5,
-                 l2: float = 1e-3, refit_every: int = 8):
+                 l2: float | None = None, refit_every: int | None = None,
+                 surrogate="ridge", surrogate_kwargs: dict | None = None):
         if pool_factor < 1:
             raise ValueError("pool_factor must be >= 1")
         self.graph = graph
@@ -182,8 +210,25 @@ class SurrogateGuided:
         self.pool_factor = pool_factor
         self.elite_frac = elite_frac
         self.mutation_prob = mutation_prob
-        self.surrogate = RidgeSurrogate(graph, l2=l2,
-                                        refit_every=refit_every)
+        if isinstance(surrogate, str):
+            kwargs = dict(surrogate_kwargs or {})
+            if l2 is not None:
+                if surrogate != "ridge":
+                    raise ValueError(
+                        "l2 only applies to the ridge surrogate; use "
+                        "surrogate_kwargs for model-specific options")
+                kwargs.setdefault("l2", l2)
+            if refit_every is not None:
+                kwargs.setdefault("refit_every", refit_every)
+            self.surrogate = make_surrogate(graph, surrogate, **kwargs)
+        else:
+            if (surrogate_kwargs is not None or l2 is not None
+                    or refit_every is not None):
+                raise ValueError(
+                    "surrogate_kwargs/l2/refit_every only apply when "
+                    "surrogate is a registry name, not a pre-built "
+                    "object")
+            self.surrogate = surrogate
         self._observed: dict[tuple, float] = {}     # canonical key -> time
         self._elites: list[tuple[float, Schedule]] = []
         self._pending: dict[tuple, float] = {}      # key -> predicted time
@@ -289,7 +334,9 @@ class PortfolioSearch:
     observation — whatever phase proposed it — feeds both the MCTS tree
     (via path materialization) and the surrogate's training set, so the
     exploitation phase starts from everything the earlier phases
-    learned.
+    learned. ``**surrogate_kwargs`` reaches :class:`SurrogateGuided`,
+    so ``PortfolioSearch(..., surrogate="boost")`` exploits with the
+    gradient-boosted tree model.
 
     Budget accounting caveat: the greedy phase scores candidate
     extensions with *prefix* simulations of its own

@@ -1,9 +1,10 @@
-"""Shared test configuration: deterministic seeding + markers.
+"""Shared test configuration: deterministic seeding.
 
 Every test runs with the global ``random`` and legacy numpy RNGs
 re-seeded, so test order / ``-k`` selections / partial runs cannot
 change outcomes (library code that takes explicit seeds is unaffected —
-this only pins accidental global-state consumers).
+this only pins accidental global-state consumers). Markers are
+registered in pytest.ini.
 """
 import os
 import random
@@ -19,13 +20,6 @@ if _REPO not in sys.path:
     sys.path.insert(0, _REPO)
 
 GLOBAL_SEED = 0
-
-
-def pytest_configure(config):
-    config.addinivalue_line(
-        "markers",
-        "smoke: 30-second end-to-end search->rules pass (select with "
-        "-m smoke)")
 
 
 @pytest.fixture(autouse=True)

@@ -1,0 +1,174 @@
+"""The distill() pipeline, RuleReport rendering, and the vectorized
+label/accuracy helpers locked to their loop references."""
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.rules as R
+import repro.search as S
+
+
+@pytest.fixture(scope="module")
+def spmv_results():
+    g = C.spmv_dag()
+    full = S.run_search(g, S.ExhaustiveSearch(g, 2), budget=None,
+                        batch_size=64)
+    subset = S.run_search(g, S.MCTSSearch(g, 2, seed=2), budget=100)
+    return full, subset
+
+
+# -- distill ------------------------------------------------------------------
+
+def test_distill_end_to_end(spmv_results):
+    full, _ = spmv_results
+    rep = R.distill(full)
+    assert isinstance(rep, R.RuleReport)
+    assert rep.n_schedules == len(full.schedules)
+    assert rep.labeling.n_classes >= 2
+    assert rep.rulesets and rep.tree.n_leaves() == len(rep.rulesets)
+    assert rep.training_error == 0.0
+    assert not rep.annotated and rep.class_range_acc is None
+    s = rep.summary()
+    assert s["n_rulesets"] == len(rep.rulesets)
+    assert s["algorithm1_trials"] == len(rep.trace.max_leaf_nodes)
+    assert "class_range_acc" not in s
+
+
+def test_distill_matches_hand_wired_pipeline(spmv_results):
+    """distill() is the same five steps every consumer used to wire by
+    hand — identical tree and rulesets."""
+    full, _ = spmv_results
+    rep = R.distill(full)
+    fm, lab, times = full.dataset()
+    tree = C.algorithm1(fm.X, lab.labels)
+    np.testing.assert_array_equal(rep.tree.predict(fm.X),
+                                  tree.predict(fm.X))
+    want = C.extract_rulesets(tree, fm.features)
+    assert [rs.atoms() for rs in rep.rulesets] == \
+        [rs.atoms() for rs in want]
+
+
+def test_distill_full_space_accuracy(spmv_results):
+    full, subset = spmv_results
+    space = (full.schedules, full.times_array())
+    rep = R.distill(subset, full_space=space)
+    assert rep.class_range_acc is not None
+    assert 0.0 <= rep.class_range_acc <= 1.0
+    # widening the ranges can only help
+    rep_w = R.distill(subset, full_space=space, range_widen=0.5)
+    assert rep_w.class_range_acc >= rep.class_range_acc
+
+
+def test_distill_canonical_annotation(spmv_results):
+    full, subset = spmv_results
+    canon = R.distill(full)
+    rep = R.distill(subset, canonical=canon)
+    assert rep.annotated
+    s = rep.summary()
+    assert "n_overconstrained" in s and "n_underconstrained" in s
+    # a report annotated against itself is never underconstrained
+    self_rep = R.distill(full, canonical=canon)
+    assert self_rep.summary()["n_underconstrained"] == 0
+    # a raw ruleset list works too (non-RuleReport canonical)
+    rep2 = R.distill(subset, canonical=canon.rulesets)
+    assert [rs.insufficient for rs in rep2.rulesets] == \
+        [rs.insufficient for rs in rep.rulesets]
+
+
+def test_distill_pluggable_labeler(spmv_results):
+    full, _ = spmv_results
+    calls = []
+
+    def labeler(times):
+        calls.append(len(times))
+        return R.label_times(times, prominence_percentile=90.0)
+
+    rep = R.distill(full, labeler=labeler)
+    assert calls == [len(full.schedules)]
+    assert rep.labeling.n_classes >= 1
+
+
+def test_rule_report_render_and_write(tmp_path, spmv_results):
+    full, subset = spmv_results
+    rep = R.distill(subset, canonical=R.distill(full),
+                    full_space=(full.schedules, full.times_array()))
+    text = rep.render()
+    assert "# design-rule report" in text
+    assert "performance class 1" in text
+    assert "class-range accuracy" in text
+    assert "vs canonical rules" in text
+    out = rep.write(tmp_path / "sub" / "rules.md")
+    assert out.read_text() == text
+
+
+def test_render_rules_table_matches_report_sections(spmv_results):
+    full, _ = spmv_results
+    rep = R.distill(full)
+    table = R.render_rules_table(rep.grouped(), top_k=3)
+    assert table in rep.render(top_k=3)
+
+
+# -- vectorized helpers locked to their loop references -----------------------
+
+def test_peak_prominences_vectorized_equals_loop():
+    rng = np.random.default_rng(0)
+    for n in (3, 10, 100, 1000):
+        for _ in range(5):
+            x = rng.random(n)
+            if rng.random() < 0.3:      # plateau-heavy signals
+                x = np.round(x, 1)
+            peaks = R.find_peaks(x)
+            np.testing.assert_allclose(
+                R.peak_prominences(x, peaks),
+                R.peak_prominences_loop(x, peaks))
+    # edge: peak at the array boundary windows
+    x = np.array([0.0, 2.0, 1.0, 3.0, 0.0])
+    p = R.find_peaks(x)
+    np.testing.assert_allclose(R.peak_prominences(x, p),
+                               R.peak_prominences_loop(x, p))
+
+
+def test_class_range_accuracy_vectorized_equals_loop(spmv_results):
+    full, subset = spmv_results
+    fm, lab, _ = subset.dataset()
+    tree = C.algorithm1(fm.X, lab.labels)
+    Xf = C.featurize_like(full.graph, full.schedules, fm)
+    times = full.times_array()
+    ranges = lab.class_ranges()
+    assert R.class_range_accuracy(tree, Xf, times, ranges) == \
+        pytest.approx(
+            R.class_range_accuracy_loop(tree, Xf, times, ranges))
+    # empty space edge case
+    assert R.class_range_accuracy(
+        tree, np.zeros((0, fm.X.shape[1])), np.zeros(0), ranges) == 0.0
+
+
+def test_labeling_unchanged_by_vectorization():
+    """label_times (searchsorted labels, numpy prominences) matches the
+    documented §IV-A semantics on structured data."""
+    rng = np.random.default_rng(0)
+    times = np.concatenate([
+        1.00 + 0.01 * rng.random(400),
+        1.50 + 0.01 * rng.random(300),
+        2.00 + 0.01 * rng.random(300),
+    ])
+    rng.shuffle(times)
+    lab = R.label_times(times)
+    assert 3 <= lab.n_classes <= 5
+    srt = lab.labels[np.argsort(times, kind="stable")]
+    assert (np.diff(srt) >= 0).all()
+    # every boundary index bumps the class exactly once
+    assert lab.n_classes == len(lab.boundaries) + 1
+
+
+# -- benchmarks plumbing ------------------------------------------------------
+
+def test_tables678_writes_explicit_path(tmp_path):
+    from benchmarks.paper import tables678_rules
+
+    out = tmp_path / "rules_canonical.md"
+    rows = tables678_rules(rules_path=out)
+    assert len(rows) == 3
+    text = out.read_text()
+    assert "# design-rule report" in text
+    assert "performance class 1" in text
