@@ -1,0 +1,128 @@
+"""Search-driver benchmarks: acquisition races + streaming sinks.
+
+``acquisition_benches`` races the :data:`repro.driver.ACQUISITIONS`
+registry on halo3d at an equal 300-discrete-event-simulation budget
+(``sim_budget``, batch_size=1 — the exact-cap configuration of the
+PR 4 ``screen_*`` rows), all through the same ``SurrogateGuided``
+boosted-surrogate strategy so the *only* difference between rows is
+how the candidate pool is ranked:
+
+  * ``argmin_topk`` — the original predicted-time screening
+    (baseline; reproduces the PR 4 ``screen_boost`` numbers exactly);
+  * ``ucb`` (beta=0.5) — the exploring operating point: spends
+    simulations on uncertain candidates, trading screening Spearman
+    for a better best-found makespan;
+  * ``ei_greedy`` (xi=-0.08) — exploitation-leaning expected
+    improvement: mean-first with per-tree ensemble uncertainty as the
+    tie-breaker, which *raises* screening Spearman above argmin;
+  * ``ei_balanced`` (xi=-0.15) — the both-targets point: matches the
+    0.80 screening Spearman *and* finds the ucb-grade best makespan.
+
+``sink_benches`` measures what the streaming ``DatasetSink`` buys:
+the distillation-side featurize stage drops to zero (the corpus was
+folded batch-by-batch during the search) with a byte-identical
+feature matrix.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import repro.rules as R
+import repro.search as S
+from repro.core.dag import halo3d_dag
+from repro.driver import DatasetSink, SearchDriver
+
+ACQ_SIMS = 300          # equal simulation budget (matches screen_*)
+
+# (row tag, registry name, kwargs) — one ACQUISITIONS entry per row.
+ACQ_CONFIGS = (
+    ("argmin_topk", "argmin_topk", {}),
+    ("ucb", "ucb", {"beta": 0.5}),
+    ("ei_greedy", "expected_improvement", {"xi": -0.08}),
+    ("ei_balanced", "expected_improvement", {"xi": -0.15}),
+)
+
+
+def _acq_race(tag: str, name: str, kwargs: dict) -> tuple[dict, list[str]]:
+    g = halo3d_dag()
+    strat = S.SurrogateGuided(g, 2, seed=0, surrogate="boost")
+    ev = S.make_evaluator(g, "vectorized")
+    t0 = time.perf_counter()
+    res = SearchDriver(g, strat, evaluator=ev, budget=None,
+                       sim_budget=ACQ_SIMS, batch_size=1,
+                       acquisition=name, acquisition_kwargs=kwargs).run()
+    wall = (time.perf_counter() - t0) / max(1, res.cache_misses) * 1e6
+    ev.close()
+    q = strat.screening_quality()
+    stats = {"spearman": q["spearman"], "best": res.best()[1]}
+    params = "/".join(f"{k}={v}" for k, v in kwargs.items()) or "default"
+    rows = [
+        f"acq_{tag}_halo3d_spearman,{wall:.2f},"
+        f"{q['spearman']:.3f} ({params})",
+        f"acq_{tag}_halo3d_best_us,{wall:.2f},{res.best()[1] * 1e6:.2f}",
+        f"acq_{tag}_halo3d_sims,{wall:.2f},"
+        f"{res.cache_misses}_of_{ACQ_SIMS}",
+    ]
+    return stats, rows
+
+
+def acquisition_benches() -> list[str]:
+    rows: list[str] = []
+    stats: dict[str, dict] = {}
+    for tag, name, kwargs in ACQ_CONFIGS:
+        stats[tag], r = _acq_race(tag, name, kwargs)
+        rows += r
+    base = stats["argmin_topk"]
+    unc = {t: s for t, s in stats.items() if t != "argmin_topk"}
+    best_rho = max(unc.values(), key=lambda s: s["spearman"])
+    best_mk = min(unc.values(), key=lambda s: s["best"])
+    rows += [
+        f"acq_best_spearman_vs_argmin,0.00,"
+        f"{best_rho['spearman'] - base['spearman']:+.3f}",
+        f"acq_best_makespan_vs_argmin,0.00,"
+        f"{best_mk['best'] / base['best']:.4f}",
+    ]
+    return rows
+
+
+def sink_benches() -> list[str]:
+    """Streaming DatasetSink vs post-hoc featurize-from-scratch."""
+    g = halo3d_dag()
+    sink = DatasetSink(g)
+    res = SearchDriver(g, S.RandomSearch(g, 2, seed=0), budget=1000,
+                       batch_size=64, backend="vectorized",
+                       sinks=[sink]).run()
+    t0 = time.perf_counter()
+    rep_stream = sink.distill()
+    wall_stream = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rep_batch = R.distill(res)
+    wall_batch = time.perf_counter() - t0
+    fm_s, _, _ = sink.dataset()
+    fm_b = rep_batch.feature_matrix
+    identical = bool(fm_s.features == fm_b.features
+                     and fm_s.X.tobytes() == fm_b.X.tobytes()
+                     and np.array_equal(rep_stream.labeling.labels,
+                                        rep_batch.labeling.labels))
+    featurize_ms = rep_batch.stage_seconds["featurize"] * 1e3
+    return [
+        f"driver_sink_stream_identical,{wall_stream * 1e6:.2f},"
+        f"{identical}",
+        f"driver_sink_distill_ms,{wall_stream * 1e6:.2f},"
+        f"{wall_stream * 1e3:.1f}",
+        f"driver_sink_batch_distill_ms,{wall_batch * 1e6:.2f},"
+        f"{wall_batch * 1e3:.1f}",
+        f"driver_sink_featurize_skipped_ms,{wall_stream * 1e6:.2f},"
+        f"{featurize_ms:.1f}",
+    ]
+
+
+def driver_benches() -> list[str]:
+    return acquisition_benches() + sink_benches()
+
+
+if __name__ == "__main__":
+    for row in driver_benches():
+        print(row)

@@ -13,13 +13,16 @@ output, for a 2026 workload.
 Usage: PYTHONPATH=src python examples/schedule_search.py
            [--arch qwen2.5-32b] [--layers 4] [--iters 600]
            [--strategy portfolio|mcts] [--backend sim|vectorized|pool]
-           [--surrogate ridge|boost] [--rules [PATH]]
+           [--surrogate ridge|boost]
+           [--acquisition argmin_topk|ucb|expected_improvement]
+           [--rules [PATH]]
 """
 import argparse
 
 import repro.rules as R
 import repro.search as S
 from repro.configs import get_config
+from repro.driver import ACQUISITIONS
 from repro.core.stepdag import StepCosts, train_step_dag, \
     with_comm_durations
 from repro.launch.costs import HBM_BW, LINK_BW, PEAK_FLOPS
@@ -67,6 +70,14 @@ def main() -> None:
                     help="screening model for the portfolio's "
                          "exploitation phase (repro.search surrogate "
                          "registry; 'boost' = gradient-boosted trees)")
+    ap.add_argument("--acquisition",
+                    choices=tuple(sorted(ACQUISITIONS)),
+                    default="argmin_topk",
+                    help="how the candidate pool is ranked "
+                         "(repro.driver acquisition registry; ucb / "
+                         "expected_improvement add the boosted "
+                         "ensemble's per-tree uncertainty — pair them "
+                         "with --surrogate boost)")
     ap.add_argument("--rules", nargs="?", const="-", default=None,
                     metavar="PATH",
                     help="render the full design-rule report "
@@ -85,7 +96,8 @@ def main() -> None:
 
     if args.strategy == "portfolio":
         strategy = S.PortfolioSearch(graph, args.channels, seed=0,
-                                     surrogate=args.surrogate)
+                                     surrogate=args.surrogate,
+                                     acquisition=args.acquisition)
     else:
         strategy = S.MCTSSearch(graph, args.channels, seed=0)
     res = S.run_search(graph, strategy, budget=args.iters,

@@ -12,7 +12,12 @@ Pipeline (paper Fig. 2):
 
 The labels -> tree -> rules stack lives in :mod:`repro.rules` (one
 call: :func:`repro.rules.distill`); this package re-exports it through
-shims for compatibility.
+shims for compatibility. The shim *modules* (labels.py, dtree.py,
+rules.py, mcts.py) emit :class:`DeprecationWarning` on import, so this
+``__init__`` re-exports the moved names straight from their new homes
+— ``import repro.core`` stays warning-free; only touching the old
+module paths (or the legacy ``MCTS`` wrapper, loaded lazily below)
+warns.
 """
 from repro.core.dag import (BoundOp, CommRole, Graph, Op, OpKind, Schedule,
                             canonicalize_streams, spmv_dag,
@@ -20,17 +25,26 @@ from repro.core.dag import (BoundOp, CommRole, Graph, Op, OpKind, Schedule,
 from repro.core.sync import ExpandedItem, expand, expanded_names
 from repro.core.enumerate import count_schedules, enumerate_schedules
 from repro.core.costmodel import Machine, SimResult, makespan, simulate
-from repro.core.mcts import MCTS, MCTSResult
-from repro.core.labels import Labeling, label_times
+from repro.rules.labels import Labeling, label_times
 from repro.core.features import (DegenerateFeatureSpaceError, Feature,
                                  FeatureBasis, FeatureMatrix,
                                  apply_features, featurize, featurize_like)
-from repro.core.dtree import DecisionTree, TreeSearchTrace, algorithm1
-from repro.core.rules import (Rule, RuleSet, annotate_vs_canonical,
-                              class_range_accuracy, extract_rulesets,
-                              render_rules_table, rules_by_class)
+from repro.rules.trees import DecisionTree, TreeSearchTrace, algorithm1
+from repro.rules.rulesets import (Rule, RuleSet, annotate_vs_canonical,
+                                  class_range_accuracy, extract_rulesets,
+                                  render_rules_table, rules_by_class)
 from repro.core.executor import build_runner, jit_runner, op_impl
 from repro.core.stepdag import StepCosts, train_step_dag, with_comm_durations
+
+
+def __getattr__(name: str):
+    # The legacy MCTS wrapper lives in the deprecated repro.core.mcts
+    # module; loading it eagerly would make every ``import repro.core``
+    # warn. Resolved on first attribute access instead.
+    if name in ("MCTS", "MCTSResult"):
+        import repro.core.mcts as _mcts
+        return getattr(_mcts, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "BoundOp", "CommRole", "Graph", "Op", "OpKind", "Schedule",

@@ -6,8 +6,17 @@ kernel is shared between the design-rule tree, the warm-started
 Algorithm-1 sweep, and the gradient-boosted surrogate's
 :class:`~repro.rules.trees.RegressionTree`. Import from
 :mod:`repro.rules` (or keep importing from here / :mod:`repro.core`;
-both stay supported).
+both stay supported, with a :class:`DeprecationWarning` so the shim
+can eventually be deleted — every name here *is* the
+:mod:`repro.rules.trees` object, asserted by tests/test_shims.py).
 """
+import warnings
+
+warnings.warn(
+    "repro.core.dtree is a deprecated shim; import DecisionTree/"
+    "algorithm1/... from repro.rules (new home: repro.rules.trees)",
+    DeprecationWarning, stacklevel=2)
+
 from repro.rules.trees import (DecisionTree, Presort, RegressionTree,
                                TreeNode, TreeSearchTrace, algorithm1)
 

@@ -5,8 +5,17 @@ subsystem — :mod:`repro.rules` — where it shares the labels -> trees ->
 rulesets pipeline (:func:`repro.rules.distill`) with the vectorized
 tree trainer and the design-rule renderer. Import from
 :mod:`repro.rules` (or keep importing from here / :mod:`repro.core`;
-both stay supported).
+both stay supported, with a :class:`DeprecationWarning` so the shim
+can eventually be deleted — every name here *is* the
+:mod:`repro.rules.labels` object, asserted by tests/test_shims.py).
 """
+import warnings
+
+warnings.warn(
+    "repro.core.labels is a deprecated shim; import label_times/"
+    "Labeling/... from repro.rules (new home: repro.rules.labels)",
+    DeprecationWarning, stacklevel=2)
+
 from repro.rules.labels import (Labeling, find_peaks, label_times,
                                 peak_prominences, peak_prominences_loop,
                                 step_convolve)

@@ -10,12 +10,24 @@ batched + memoized evaluation.
 
 The wrapper is sequence-identical to the pre-refactor implementation:
 one selection/expansion/rollout per iteration, objective call, then
-backpropagation, with the same RNG consumption order.
+backpropagation, with the same RNG consumption order. Importing this
+module emits a :class:`DeprecationWarning` (the tree search's real
+home is :mod:`repro.search.mcts`; ``repro.core`` therefore loads it
+lazily), so the shim can eventually be deleted —
+tests/test_shims.py asserts the lazy names resolve to the
+:mod:`repro.search.mcts` objects.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable
+
+warnings.warn(
+    "repro.core.mcts is a deprecated legacy wrapper; use "
+    "repro.search.MCTSSearch with repro.search.run_search (batched + "
+    "memoized evaluation) instead of MCTS.run",
+    DeprecationWarning, stacklevel=2)
 
 from repro.core.dag import Graph, Schedule
 

@@ -5,8 +5,18 @@ subsystem — :mod:`repro.rules` — next to the tree trainer it consumes
 and the :func:`repro.rules.distill` pipeline that renders
 :class:`~repro.rules.pipeline.RuleReport`. Import from
 :mod:`repro.rules` (or keep importing from here / :mod:`repro.core`;
-both stay supported).
+both stay supported, with a :class:`DeprecationWarning` so the shim
+can eventually be deleted — every name here *is* the
+:mod:`repro.rules.rulesets` object, asserted by tests/test_shims.py).
 """
+import warnings
+
+warnings.warn(
+    "repro.core.rules is a deprecated shim; import RuleSet/"
+    "extract_rulesets/... from repro.rules (new home: "
+    "repro.rules.rulesets)",
+    DeprecationWarning, stacklevel=2)
+
 from repro.rules.rulesets import (Rule, RuleSet, annotate_vs_canonical,
                                   class_range_accuracy,
                                   class_range_accuracy_loop,

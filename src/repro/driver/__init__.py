@@ -1,0 +1,51 @@
+"""Acquisition-aware search driver subsystem.
+
+The propose/observe control path of the whole reproduction, extracted
+from ``repro.search.pipeline`` the way :mod:`repro.engine` extracted
+evaluation and :mod:`repro.rules` extracted distillation:
+
+* :class:`SearchDriver` (:mod:`repro.driver.driver`) — the round loop
+  (propose pool -> acquisition -> evaluate -> observe -> sinks);
+  ``repro.search.run_search`` is its bit-compatible thin wrapper.
+* :data:`ACQUISITIONS` (:mod:`repro.driver.acquisitions`) — pool
+  ranking: ``argmin_topk`` (the original screening), ``ucb``,
+  ``expected_improvement``; uncertainty via ``predict_with_std``.
+* :data:`SINKS` (:mod:`repro.driver.sinks`) — streaming consumers of
+  evaluated batches: ``dataset`` (incremental featurization +
+  histogram for streaming distillation), ``trace`` (per-round choice
+  stream).
+
+See README.md in this package for the round lifecycle, the registry
+seams, and the determinism guarantees.
+
+``SearchDriver`` is loaded lazily: :mod:`repro.driver.driver` imports
+:mod:`repro.search.pipeline` (for ``SearchResult``), while
+``repro.search.surrogate`` imports :mod:`repro.driver.acquisitions` —
+eager loading here would make this package's import order depend on
+who imports whom first.
+"""
+from repro.driver.acquisitions import (ACQUISITIONS, AcquisitionFn,
+                                       argmin_topk, expected_improvement,
+                                       make_acquisition, predict_with_std,
+                                       register_acquisition,
+                                       resolve_acquisition, ucb)
+from repro.driver.sinks import (SINKS, DatasetSink, Sink,
+                                StreamingHistogram, TraceSink, make_sink,
+                                register_sink)
+
+__all__ = [
+    "SearchDriver",
+    "ACQUISITIONS", "AcquisitionFn", "argmin_topk",
+    "expected_improvement", "make_acquisition", "predict_with_std",
+    "register_acquisition", "resolve_acquisition", "ucb",
+    "SINKS", "DatasetSink", "Sink", "StreamingHistogram", "TraceSink",
+    "make_sink", "register_sink",
+]
+
+
+def __getattr__(name: str):
+    if name == "SearchDriver":
+        from repro.driver.driver import SearchDriver
+        return SearchDriver
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,196 @@
+"""The acquisition-aware search driver: the propose/observe round loop.
+
+:class:`SearchDriver` owns the control path that used to live inline
+in ``repro.search.pipeline.run_search``: rounds of
+
+    propose pool -> score pool with an acquisition function
+        -> evaluate the chosen batch -> observe -> stream to sinks
+
+against any :class:`~repro.search.strategy.SearchStrategy` and any
+evaluation-engine backend. ``run_search`` remains the public entry
+point — a thin wrapper constructing a driver with no acquisition
+override and no sinks, which is **bit-compatible** with the
+pre-driver loop: identical proposal sequence, evaluator traffic,
+dedup, budget/stall accounting, and therefore byte-identical
+``(features, labels, times)`` for every strategy/backend/seed combo
+(locked by tests/test_driver.py).
+
+What the driver adds over the old loop:
+
+* **Acquisition override** (``acquisition=``): for strategies that
+  speak the pool protocol
+  (:class:`~repro.search.strategy.PoolSearchStrategy` —
+  ``SurrogateGuided`` and anything the portfolio delegates to it),
+  the driver takes over screening: it asks the strategy for its raw
+  candidate pool and ranks it with a named
+  :data:`~repro.driver.acquisitions.ACQUISITIONS` entry
+  (``argmin_topk`` reproduces the strategy's built-in behavior
+  exactly; ``ucb`` / ``expected_improvement`` add uncertainty from
+  the boosted ensemble's per-tree variance). Strategies without a
+  pool (MCTS, random, exhaustive) ignore the override and propose as
+  usual.
+* **Sinks** (``sinks=``): every evaluated batch is streamed — with
+  its run-level freshness mask — to each attached
+  :class:`~repro.driver.sinks.Sink` (``"dataset"`` folds the corpus
+  incrementally for streaming distillation; ``"trace"`` records the
+  per-round choice stream). Names resolve through
+  :func:`~repro.driver.sinks.make_sink`; pre-built objects pass
+  through.
+
+Determinism: the driver adds no randomness of its own. Proposal RNG
+lives in the strategy, evaluation noise in the evaluator (seeded per
+canonical key), and acquisition scoring is a pure function of the
+surrogate state — so the same seed and corpus choose the same batch
+on every analytic backend (locked by the cross-backend tests).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.costmodel import Machine
+from repro.core.dag import Graph, Schedule
+from repro.driver.acquisitions import AcquisitionFn, resolve_acquisition
+from repro.driver.sinks import Sink, make_sink
+from repro.engine import make_evaluator
+from repro.engine.base import EvaluatorBase
+from repro.search.pipeline import SearchResult
+from repro.search.strategy import PoolSearchStrategy, SearchStrategy
+
+
+class SearchDriver:
+    """Round-based search loop: propose -> screen -> evaluate -> stream.
+
+    Single-use: construct, :meth:`run` once, read the
+    :class:`~repro.search.pipeline.SearchResult`. All parameters
+    shared with ``run_search`` keep its exact semantics (see that
+    docstring for budget/sim_budget/batch_size/stall_limit); the
+    driver-only knobs are ``acquisition`` / ``acquisition_kwargs``
+    (registry name or a pre-built ``acq(surrogate, pool, best=)``
+    callable) and ``sinks`` (registry names or pre-built objects; the
+    caller owns sink lifecycle — the driver only ``consume``\\ s).
+    """
+
+    def __init__(self, graph: Graph, strategy: SearchStrategy,
+                 machine: Machine | None = None,
+                 budget: int | None = 2000,
+                 batch_size: int = 1,
+                 evaluator: EvaluatorBase | None = None,
+                 backend: str | None = None,
+                 backend_kwargs: dict | None = None,
+                 sim_budget: int | None = None,
+                 stall_limit: int = 1000,
+                 acquisition: "str | AcquisitionFn | None" = None,
+                 acquisition_kwargs: dict | None = None,
+                 sinks: "tuple | list" = ()):
+        if evaluator is not None and machine is not None:
+            raise ValueError(
+                "pass either machine= or evaluator= (the evaluator "
+                "already owns a machine), not both")
+        if evaluator is not None and (backend is not None
+                                      or backend_kwargs is not None):
+            raise ValueError(
+                "pass either backend=/backend_kwargs= or a "
+                "preconfigured evaluator=, not both")
+        if acquisition is None and acquisition_kwargs is not None:
+            raise ValueError(
+                "acquisition_kwargs requires acquisition=")
+        self.graph = graph
+        self.strategy = strategy
+        self.machine = machine
+        self.budget = budget
+        self.batch_size = batch_size
+        self.evaluator = evaluator
+        self.backend = backend
+        self.backend_kwargs = backend_kwargs
+        self.sim_budget = sim_budget
+        self.stall_limit = stall_limit
+        self.acquisition = None if acquisition is None else \
+            resolve_acquisition(acquisition, acquisition_kwargs)
+        self.sinks: list[Sink] = [
+            make_sink(s, graph) if isinstance(s, str) else s
+            for s in sinks]
+        self._ran = False
+
+    # -- one round's proposal ------------------------------------------
+    def _choose(self, ask: int) -> list[Schedule]:
+        """The round's batch: acquisition-screened when possible.
+
+        With an acquisition override and a pool-protocol strategy, the
+        driver screens the strategy's raw pool itself (the strategy
+        still keeps the screening bookkeeping — pending predictions,
+        pool counters — so ``screening_quality()`` reports whichever
+        acquisition actually ran). Otherwise the strategy's own
+        ``propose`` is the whole story, clamped exactly like the
+        pre-driver loop.
+        """
+        s = self.strategy
+        if self.acquisition is not None \
+                and isinstance(s, PoolSearchStrategy):
+            pool = s.propose_pool(ask)
+            if pool is not None:
+                chosen = s.screen(pool, ask, self.acquisition)
+                # same over-returning clamp as the propose() path: a
+                # screen() that ignores its budget must not overshoot
+                return s.pad(chosen, ask)[:ask]
+        return s.propose(ask)[:ask]
+
+    # -- the loop -------------------------------------------------------
+    def run(self) -> SearchResult:
+        """Drive the strategy to completion; see ``run_search``."""
+        if self._ran:
+            raise RuntimeError(
+                "SearchDriver is single-use: strategy and sink state "
+                "carry across rounds, so re-running would double-count "
+                "observations; construct a fresh driver instead")
+        self._ran = True
+        owns_evaluator = self.evaluator is None
+        ev = self.evaluator if self.evaluator is not None else \
+            make_evaluator(self.graph, self.backend or "sim",
+                           machine=self.machine,
+                           **(self.backend_kwargs or {}))
+        budget, batch_size = self.budget, self.batch_size
+        sim_budget, stall_limit = self.sim_budget, self.stall_limit
+        hits0, misses0 = ev.cache_hits, ev.cache_misses
+        schedules: list[Schedule] = []
+        times: list[float] = []
+        seen: set[bytes] = set()
+        n_proposed = 0
+        stalled = 0
+
+        try:
+            while ((budget is None or n_proposed < budget) and
+                   (sim_budget is None
+                    or ev.cache_misses - misses0 < sim_budget)):
+                ask = batch_size if budget is None else \
+                    min(batch_size, budget - n_proposed)
+                batch = self._choose(ask)
+                if not batch:
+                    break
+                n_proposed += len(batch)
+                batch_misses0 = ev.cache_misses
+                eb = ev.evaluate_batch(batch)
+                fresh = np.zeros(len(eb), dtype=bool)
+                for i, (schedule, key, t) in enumerate(eb):
+                    self.strategy.observe(schedule, float(t))
+                    if key not in seen:
+                        seen.add(key)
+                        fresh[i] = True
+                        schedules.append(schedule)
+                        times.append(float(t))
+                for sink in self.sinks:
+                    sink.consume(eb, fresh)
+                if sim_budget is not None or budget is None:
+                    if ev.cache_misses == batch_misses0:
+                        stalled += len(batch)
+                        if stalled >= stall_limit:
+                            break
+                    else:
+                        stalled = 0
+        finally:
+            if owns_evaluator:
+                ev.close()
+
+        return SearchResult(graph=self.graph, schedules=schedules,
+                            times=times, n_proposed=n_proposed,
+                            cache_hits=ev.cache_hits - hits0,
+                            cache_misses=ev.cache_misses - misses0)

@@ -1,0 +1,231 @@
+"""Streaming result sinks: consume evaluated batches as they land.
+
+The pre-driver pipeline materialized the whole deduplicated schedule
+list and re-featurized it from scratch whenever the rules pipeline ran
+(``SearchResult.dataset()`` -> ``featurize`` -> the full double
+expansion). Sinks invert that: the :class:`~repro.driver.driver.
+SearchDriver` streams every evaluated :class:`~repro.engine.base.
+EvalBatch` (plus the run-level freshness mask) to each attached sink
+*during* the search, so by the time the search returns, the dataset is
+already folded.
+
+``dataset`` — :class:`DatasetSink`
+    Folds each batch's fresh (first-seen canonical) schedules into an
+    incremental :class:`~repro.core.features.FeatureBasis` (schedules
+    are sync-expanded exactly once, never re-featurized) and an
+    incremental time histogram. ``dataset()`` then emits the same
+    ``(features, labels, times)`` triple ``SearchResult.dataset()``
+    computes from scratch — byte-identical, locked by test — and
+    ``distill()`` hands the streamed matrix straight to
+    :func:`repro.rules.distill` (``features=``), skipping the
+    re-featurization pass entirely. The doubling histogram is the seed
+    of the ROADMAP's out-of-core distillation path: label/split
+    statistics folded per batch instead of recomputed per corpus.
+
+``trace`` — :class:`TraceSink`
+    Records one row per driver round (canonical keys chosen, fresh
+    count, running best) — the determinism probe used by the
+    cross-backend acquisition tests and the benchmark race logs.
+
+Sinks implement one method::
+
+    consume(batch: EvalBatch, fresh: np.ndarray) -> None
+
+where ``fresh[i]`` marks the first occurrence of ``batch.keys[i]``
+within the driver run (the same dedup that builds
+``SearchResult.schedules``). Registered factories are constructed as
+``factory(graph, **kwargs)`` via :func:`make_sink`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.dag import Graph, Schedule
+from repro.core.features import (DegenerateFeatureSpaceError, FeatureBasis,
+                                 FeatureMatrix)
+from repro.engine.base import EvalBatch
+
+
+@runtime_checkable
+class Sink(Protocol):
+    """Consumer of evaluated batches streamed by the search driver."""
+
+    def consume(self, batch: EvalBatch, fresh: np.ndarray) -> None:
+        """Fold one evaluated batch (with run-level freshness mask)."""
+        ...
+
+
+class StreamingHistogram:
+    """Fixed-width counts over a range that doubles on overflow.
+
+    The incremental form of ``np.histogram``: ``add`` folds a batch
+    into ``2 * half_bins`` equal-width bins spanning ``[0, hi)``; when
+    a value lands past ``hi`` the range doubles and adjacent bin pairs
+    merge (counts are preserved exactly), so the memory footprint is
+    constant no matter how many observations stream through. This is
+    the label-histogram seed for out-of-core distillation: class
+    boundaries can be estimated from the folded counts without holding
+    every observation.
+    """
+
+    def __init__(self, half_bins: int = 128):
+        if half_bins < 1:
+            raise ValueError("half_bins must be >= 1")
+        self.n_bins = 2 * half_bins
+        self.counts = np.zeros(self.n_bins, dtype=np.int64)
+        self.hi = 0.0                      # upper edge; 0 = no data yet
+
+    def add(self, values: np.ndarray) -> None:
+        v = np.asarray(values, dtype=np.float64)
+        if v.size == 0:
+            return
+        if np.any(v < 0.0):
+            raise ValueError("times must be non-negative")
+        vmax = float(v.max())
+        if self.hi == 0.0:
+            self.hi = vmax * 2.0 if vmax > 0.0 else 1.0
+        while vmax >= self.hi:
+            self.counts = (self.counts[0::2] + self.counts[1::2])
+            self.counts = np.concatenate(
+                [self.counts, np.zeros(self.n_bins // 2, np.int64)])
+            self.hi *= 2.0
+        idx = np.minimum((v / self.hi * self.n_bins).astype(np.int64),
+                         self.n_bins - 1)
+        np.add.at(self.counts, idx, 1)
+
+    @property
+    def n(self) -> int:
+        return int(self.counts.sum())
+
+    def edges(self) -> np.ndarray:
+        """Bin edges, ``np.histogram`` convention (n_bins + 1 values)."""
+        return np.linspace(0.0, self.hi, self.n_bins + 1)
+
+
+class DatasetSink:
+    """Incremental ``(features, labels, times)`` accumulator.
+
+    Mirrors the ``SearchResult`` dedup contract — the first observation
+    per canonical schedule, in first-appearance order — so
+    :meth:`dataset` is byte-identical to ``SearchResult.dataset()``
+    while featurizing each schedule exactly once, the round it arrives.
+    """
+
+    def __init__(self, graph: Graph, half_bins: int = 128):
+        self.graph = graph
+        self.basis = FeatureBasis(graph)
+        self.schedules: list[Schedule] = []
+        self.times: list[float] = []
+        self.histogram = StreamingHistogram(half_bins=half_bins)
+        self.n_consumed = 0                # every evaluation, dups too
+        self._seen: set[bytes] = set()     # sink-lifetime dedup
+
+    def consume(self, batch: EvalBatch, fresh: np.ndarray) -> None:
+        self.n_consumed += len(batch)
+        # The fresh mask is *per driver run*; the sink keeps its own
+        # canonical-key set so one sink fed by several runs (e.g. over
+        # a shared memoized evaluator) still holds each implementation
+        # exactly once.
+        idx = [i for i, (k, f) in enumerate(zip(batch.keys, fresh))
+               if f and k not in self._seen]
+        if not idx:
+            return
+        self._seen.update(batch.keys[i] for i in idx)
+        new = [batch.schedules[i] for i in idx]
+        self.basis.add(new)
+        self.schedules.extend(new)
+        t_new = np.asarray(batch.times)[idx]
+        self.times.extend(float(t) for t in t_new)
+        self.histogram.add(t_new)
+
+    # -- the streamed corpus -------------------------------------------
+    def times_array(self) -> np.ndarray:
+        return np.asarray(self.times, dtype=np.float64)
+
+    def matrix(self) -> FeatureMatrix:
+        """Constant-pruned feature matrix of everything streamed so far.
+
+        Same contract as :func:`repro.core.features.featurize`
+        (including :class:`DegenerateFeatureSpaceError` on a corpus
+        with no discriminating features) — but the expansion work was
+        already paid batch by batch.
+        """
+        fm = self.basis.matrix()
+        if not fm.features:
+            raise DegenerateFeatureSpaceError(
+                f"streamed corpus of {len(self.schedules)} schedule(s) "
+                "has no discriminating features after constant-column "
+                "pruning; at least 2 distinct schedules are required")
+        return fm
+
+    def dataset(self):
+        """(features, labels, times) — ``SearchResult.dataset()`` shape."""
+        from repro.rules.labels import label_times
+        times = self.times_array()
+        return self.matrix(), label_times(times), times
+
+    def distill(self, **kwargs):
+        """:func:`repro.rules.distill` on the streamed corpus.
+
+        Passes the incrementally-built matrix via ``features=`` so the
+        rules pipeline never re-featurizes the schedule list.
+        """
+        from repro.rules.pipeline import distill
+        return distill(self, features=self.matrix(), **kwargs)
+
+
+class TraceSink:
+    """Per-round trace: what was chosen, what was fresh, running best.
+
+    ``rounds[i]`` is a dict with ``keys`` (canonical cache keys of the
+    round's batch, in proposal order), ``n_fresh``, and ``best`` (the
+    minimum time observed up to and including that round). Canonical
+    keys make traces comparable across evaluation backends — the
+    cross-backend determinism tests assert exact equality of the key
+    streams.
+    """
+
+    def __init__(self, graph: Graph | None = None):
+        self.rounds: list[dict] = []
+        self._best = float("inf")
+
+    def consume(self, batch: EvalBatch, fresh: np.ndarray) -> None:
+        if len(batch):
+            self._best = min(self._best, float(np.min(batch.times)))
+        self.rounds.append({
+            "keys": tuple(batch.keys),
+            "n_fresh": int(np.count_nonzero(fresh)),
+            "best": self._best,
+        })
+
+    def key_stream(self) -> tuple:
+        """All chosen canonical keys, round-concatenated (for equality)."""
+        return tuple(k for r in self.rounds for k in r["keys"])
+
+
+# -- the registry -------------------------------------------------------------
+
+SINKS: dict[str, Callable[..., Sink]] = {}
+"""Sink factories: name -> ``factory(graph, **kwargs) -> sink``."""
+
+
+def register_sink(name: str, factory: Callable[..., Sink]) -> None:
+    """Add a sink factory to the :data:`SINKS` registry."""
+    SINKS[name] = factory
+
+
+register_sink("dataset", DatasetSink)
+register_sink("trace", TraceSink)
+
+
+def make_sink(sink: str, graph: Graph, **kwargs) -> Sink:
+    """Construct a sink by registry name."""
+    try:
+        factory = SINKS[sink]
+    except KeyError:
+        raise ValueError(
+            f"unknown sink {sink!r}; registered: {sorted(SINKS)}"
+        ) from None
+    return factory(graph, **kwargs)

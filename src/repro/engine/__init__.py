@@ -27,7 +27,8 @@ from __future__ import annotations
 
 from repro.core.costmodel import Machine
 from repro.core.dag import Graph
-from repro.engine.base import BatchEvaluator, EvaluatorBase, canonical_key
+from repro.engine.base import (BatchEvaluator, EvalBatch, EvaluatorBase,
+                               canonical_key)
 from repro.engine.pool import PoolEvaluator
 from repro.engine.vectorized import (GraphTables, VectorizedEvaluator,
                                      simulate_batch, simulate_encoded)
@@ -69,7 +70,7 @@ def make_evaluator(graph: Graph, backend: str = "sim", *,
 
 __all__ = [
     "BACKENDS", "make_evaluator", "register_backend",
-    "EvaluatorBase", "BatchEvaluator", "canonical_key",
+    "EvaluatorBase", "BatchEvaluator", "EvalBatch", "canonical_key",
     "VectorizedEvaluator", "GraphTables", "simulate_batch",
     "simulate_encoded",
     "PoolEvaluator",

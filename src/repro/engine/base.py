@@ -30,9 +30,10 @@ tests/test_engine_vectorized.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 import random
-from typing import Sequence
+from typing import Iterator, Sequence
 
 import numpy as np
 
@@ -78,6 +79,31 @@ def _noise_gauss(noise_seed: int, key: bytes, draw: int) -> float:
     seed = int.from_bytes(
         hashlib.blake2b(payload, digest_size=8).digest(), "big")
     return random.Random(seed).gauss(0.0, 1.0)
+
+
+@dataclasses.dataclass
+class EvalBatch:
+    """One evaluated proposal batch — the record streamed to sinks.
+
+    The batch-iterator contract between evaluators and the search
+    driver (:mod:`repro.driver`): every round of evaluation yields one
+    :class:`EvalBatch` with aligned ``schedules`` / canonical ``keys``
+    / ``times``, exactly the ``(key, time)`` pairs
+    :meth:`EvaluatorBase.evaluate_keyed` returns, in proposal order
+    (duplicates included — run-level dedup is the consumer's choice,
+    not the evaluator's). Iterating yields ``(schedule, key, time)``
+    triples.
+    """
+
+    schedules: list[Schedule]
+    keys: list[bytes]
+    times: np.ndarray                    # float64, aligned
+
+    def __len__(self) -> int:
+        return len(self.schedules)
+
+    def __iter__(self) -> Iterator[tuple[Schedule, bytes, float]]:
+        return iter(zip(self.schedules, self.keys, self.times))
 
 
 class EvaluatorBase:
@@ -230,6 +256,19 @@ class EvaluatorBase:
     def evaluate(self, schedules: Sequence[Schedule]) -> list[float]:
         """Time per schedule, in order (see :meth:`evaluate_keyed`)."""
         return [t for _, t in self.evaluate_keyed(schedules)]
+
+    def evaluate_batch(self, schedules: Sequence[Schedule]) -> EvalBatch:
+        """One :class:`EvalBatch` record for ``schedules``.
+
+        The streaming form of :meth:`evaluate_keyed` — same values,
+        same cache/meter/noise semantics — packaged as the record the
+        search driver hands to its sinks.
+        """
+        keyed = self.evaluate_keyed(schedules)
+        return EvalBatch(
+            schedules=list(schedules),
+            keys=[k for k, _ in keyed],
+            times=np.asarray([t for _, t in keyed], dtype=np.float64))
 
     def evaluate_one(self, schedule: Schedule) -> float:
         return self.evaluate([schedule])[0]

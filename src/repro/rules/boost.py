@@ -28,7 +28,7 @@ import numpy as np
 
 from repro.core.dag import Graph, Schedule
 from repro.core.features import Feature, FeatureBasis, apply_features
-from repro.rules.trees import Presort, RegressionTree
+from repro.rules.trees import Presort, RegressionTree, forest_leaf_values
 
 
 class OnlineSurrogateBase:
@@ -132,6 +132,12 @@ class GradientBoostedSurrogate(OnlineSurrogateBase):
                 break
             mse = new_mse
 
+    def _leaf_matrix(self, schedules: list[Schedule]) -> np.ndarray:
+        """(n_trees, n_schedules) per-tree leaf values, one descent."""
+        X = apply_features(self.graph, schedules, self._features) \
+            .astype(np.float64)
+        return forest_leaf_values(self._trees, X)
+
     def predict(self, schedules: list[Schedule]) -> np.ndarray:
         """Predicted times, one per schedule (refits if stale)."""
         if self._stale():
@@ -139,11 +145,45 @@ class GradientBoostedSurrogate(OnlineSurrogateBase):
         out = np.full(len(schedules), self._y_mean, dtype=np.float64)
         if not self._trees or not schedules:
             return out
-        X = apply_features(self.graph, schedules, self._features) \
-            .astype(np.float64)
-        for t in self._trees:
-            out += self.learning_rate * t.predict(X)
+        # One batched leaf-gather for the whole ensemble; the
+        # accumulation stays sequential in boosting-round order, so
+        # predictions are bit-identical to summing t.predict(X) per
+        # round (each H row IS that round's t.predict(X)).
+        for row in self._leaf_matrix(schedules):
+            out += self.learning_rate * row
         return out
+
+    def predict_with_std(self, schedules: list[Schedule]
+                         ) -> tuple[np.ndarray, np.ndarray]:
+        """(predicted time, predictive deviation) per schedule.
+
+        The deviation is ensemble disagreement: treat each boosting
+        round's scaled contribution ``c_t(x) = lr * h_t(x)`` as one of
+        ``T`` votes on the total correction and report the deviation
+        the sum would have if the votes were independent —
+        ``sd(x) = sqrt(T * Var_t(c_t(x)))`` (the bagging-style proxy;
+        cf. virtual ensembles for gradient boosting). Where every
+        round lands ``x`` in leaves with similar values the model has
+        settled (sd -> 0); rounds pulling in different directions —
+        feature-space regions the corpus barely covers — inflate sd.
+        Exactly zero deviation with fewer than two trees (or no data),
+        so downstream acquisitions degrade to mean-ranking on a cold
+        model. The mean equals :meth:`predict` bit-for-bit.
+        """
+        if self._stale():
+            self._fit()
+        n = len(schedules)
+        mu = np.full(n, self._y_mean, dtype=np.float64)
+        sd = np.zeros(n, dtype=np.float64)
+        if not self._trees or not schedules:
+            return mu, sd
+        C = self.learning_rate * self._leaf_matrix(schedules)
+        for row in C:             # same accumulation order as predict
+            mu += row
+        if C.shape[0] >= 2:
+            sd = np.sqrt(C.shape[0]
+                         * np.maximum(C.var(axis=0, ddof=1), 0.0))
+        return mu, sd
 
     @property
     def n_trees(self) -> int:

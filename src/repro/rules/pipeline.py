@@ -130,7 +130,8 @@ def distill(result: "SearchResult",
             full_space: "tuple[Sequence[Schedule], np.ndarray] | None"
             = None,
             range_widen: float = 0.0,
-            initial_leaves: int | None = None) -> RuleReport:
+            initial_leaves: int | None = None,
+            features: FeatureMatrix | None = None) -> RuleReport:
     """Label -> featurize -> Algorithm 1 -> rulesets, as one call.
 
     ``labeler`` maps the observed times to a :class:`Labeling`
@@ -143,6 +144,14 @@ def distill(result: "SearchResult",
     the full space in this report's feature basis, with each class's
     (lo, hi) time range widened to (lo*(1-w), hi*(1+w)) for
     ``range_widen=w`` (noise-dosed measurements).
+
+    ``features`` is the streaming-corpus hook: a pre-built
+    :class:`FeatureMatrix` for ``result.schedules`` (row i =
+    schedule i), e.g. the incrementally folded matrix of a
+    :class:`repro.driver.DatasetSink`. When given, the featurize stage
+    is skipped entirely — the sync-expansion work was already paid
+    when the schedules streamed in. Only that stage is saved: the
+    label, tree, and rules stages still scale with the whole corpus.
     """
     stage_seconds: dict[str, float] = {}
 
@@ -154,8 +163,16 @@ def distill(result: "SearchResult",
 
     times = np.asarray(result.times, dtype=np.float64)
     labeling = staged("label", lambda: labeler(times))
-    fm = staged("featurize",
-                lambda: featurize(result.graph, result.schedules))
+    if features is not None:
+        if features.X.shape[0] != len(result.schedules):
+            raise ValueError(
+                f"features has {features.X.shape[0]} rows but the "
+                f"corpus has {len(result.schedules)} schedules — the "
+                "matrix must cover exactly the result's schedule list")
+        fm = features
+    else:
+        fm = staged("featurize",
+                    lambda: featurize(result.graph, result.schedules))
     trace = TreeSearchTrace([], [], [])
     tree = staged("tree",
                   lambda: algorithm1(fm.X, labeling.labels, trace=trace,

@@ -488,6 +488,47 @@ def _descend(flat: tuple[np.ndarray, ...], X: np.ndarray) -> np.ndarray:
         cur = np.where(active, nxt, cur)
 
 
+def forest_leaf_values(trees, X: np.ndarray) -> np.ndarray:
+    """Per-tree leaf predictions for a whole ensemble in one descent.
+
+    ``trees`` is a sequence of fitted :class:`RegressionTree` /
+    :class:`DecisionTree`; the result is ``(n_trees, n_rows)`` with
+    row ``t`` equal to ``trees[t]``'s raw leaf values on ``X`` (the
+    regression mean per leaf; the *encoded* majority class for
+    classifiers). All trees' flattened node arrays are concatenated
+    with slot offsets and descended together — one gather per level of
+    the deepest tree instead of one full descent per tree, which is
+    what makes per-tree ensemble variance
+    (:meth:`repro.rules.boost.GradientBoostedSurrogate.
+    predict_with_std`) cheap enough to sit in the acquisition hot
+    path. Leaves self-loop, so rows that finish early idle at their
+    leaf slot without a compaction pass.
+    """
+    if not trees:
+        raise ValueError("forest_leaf_values needs at least one tree")
+    X = np.asarray(X, dtype=np.float64)
+    flats = [t._flatten() for t in trees]
+    sizes = np.array([f[0].size for f in flats], dtype=np.int64)
+    off = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+    feat = np.concatenate([f[0] for f in flats])
+    thr = np.concatenate([f[1] for f in flats])
+    left = np.concatenate([f[2] + o for f, o in zip(flats, off)])
+    right = np.concatenate([f[3] + o for f, o in zip(flats, off)])
+    val = np.concatenate([f[4] for f in flats])
+    n_trees, n = len(flats), len(X)
+    cur = np.repeat(off, n)                       # each tree's root slot
+    rows = np.tile(np.arange(n), n_trees)
+    while True:
+        f = feat[cur]
+        active = f >= 0
+        if not active.any():
+            break
+        xv = X[rows, np.where(active, f, 0)]
+        nxt = np.where(xv <= thr[cur], left[cur], right[cur])
+        cur = np.where(active, nxt, cur)
+    return val[cur].reshape(n_trees, n)
+
+
 class DecisionTree:
     """CART classifier (gini, balanced class weights, best-first growth).
 

@@ -5,8 +5,19 @@
 :mod:`repro.engine.base` — where they share the memo-cache / noise /
 budget-accounting layer with the vectorized, process-pool, and
 wall-clock backends. Import from :mod:`repro.engine` (or keep importing
-from here / :mod:`repro.search`; both stay supported).
+from here / :mod:`repro.search`; both stay supported, with a
+:class:`DeprecationWarning` so the shim can eventually be deleted —
+every name here *is* the :mod:`repro.engine.base` object, asserted by
+tests/test_shims.py).
 """
+import warnings
+
+warnings.warn(
+    "repro.search.evaluator is a deprecated shim; import "
+    "BatchEvaluator/EvaluatorBase/canonical_key from repro.engine "
+    "(new home: repro.engine.base)",
+    DeprecationWarning, stacklevel=2)
+
 from repro.engine.base import BatchEvaluator, EvaluatorBase, canonical_key
 
 __all__ = ["BatchEvaluator", "EvaluatorBase", "canonical_key"]

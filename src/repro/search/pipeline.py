@@ -10,6 +10,14 @@ collects the deduplicated (schedule, time) observations.
 triple consumed by the rules distillation subsystem
 (:mod:`repro.rules`) — or pass the whole result to
 :func:`repro.rules.distill` for the one-call search -> rules report.
+
+The loop itself lives in :class:`repro.driver.SearchDriver` (the
+acquisition-aware round driver); ``run_search`` constructs a driver
+with no acquisition override and no sinks, which is bit-compatible
+with the original inline loop (locked by tests/test_driver.py).
+Construct a :class:`~repro.driver.SearchDriver` directly to screen
+pools with a named acquisition (``ucb``, ``expected_improvement``) or
+to stream evaluated batches to sinks.
 """
 from __future__ import annotations
 
@@ -20,10 +28,21 @@ import numpy as np
 from repro.core.costmodel import Machine
 from repro.core.dag import Graph, Schedule
 from repro.core.features import FeatureMatrix, featurize
-from repro.core.labels import Labeling, label_times
-from repro.engine import make_evaluator
-from repro.engine.base import EvaluatorBase
+from repro.engine.base import EvaluatorBase, canonical_key
+from repro.rules.labels import Labeling, label_times
 from repro.search.strategy import SearchStrategy
+
+
+def _tie_key(schedule: Schedule) -> tuple:
+    """Total order on canonical encodings (``None`` streams sort first).
+
+    The canonical (first-use-relabeled) item sequence with CPU ops'
+    ``None`` stream mapped to -1, so tuples compare without type
+    errors. Backend-independent: canonicalization is a pure function
+    of the schedule.
+    """
+    return tuple((name, -1 if s is None else s)
+                 for name, s in canonical_key(schedule))
 
 
 @dataclasses.dataclass
@@ -38,11 +57,24 @@ class SearchResult:
     cache_misses: int
 
     def best(self) -> tuple[Schedule, float]:
+        """The fastest observed (schedule, time).
+
+        Exact makespan ties are broken by the schedule's canonical
+        encoding (lexicographically smallest wins, CPU ops sorting
+        before stream 0), NOT by observation order — so the winner is
+        a deterministic function of the observed *set*, identical
+        across evaluation backends, batch sizes, and proposal
+        orderings that cover the same schedules.
+        """
         if not self.schedules:
             raise ValueError(
                 "empty search result (budget 0 or strategy proposed "
                 "nothing) has no best schedule")
-        i = int(np.argmin(self.times))
+        times = np.asarray(self.times, dtype=np.float64)
+        ties = np.flatnonzero(times == times.min())
+        i = int(ties[0]) if ties.size == 1 else \
+            min((int(j) for j in ties),
+                key=lambda j: _tie_key(self.schedules[j]))
         return self.schedules[i], self.times[i]
 
     def times_array(self) -> np.ndarray:
@@ -109,55 +141,10 @@ def run_search(graph: Graph, strategy: SearchStrategy,
     backend); a shared evaluator keeps its memo cache across runs, and
     the result's cache counters report this run's traffic only.
     """
-    if evaluator is not None and machine is not None:
-        raise ValueError(
-            "pass either machine= or evaluator= (the evaluator already "
-            "owns a machine), not both")
-    if evaluator is not None and (backend is not None
-                                  or backend_kwargs is not None):
-        raise ValueError(
-            "pass either backend=/backend_kwargs= or a preconfigured "
-            "evaluator=, not both")
-    owns_evaluator = evaluator is None
-    ev = evaluator if evaluator is not None else \
-        make_evaluator(graph, backend or "sim", machine=machine,
-                       **(backend_kwargs or {}))
-    hits0, misses0 = ev.cache_hits, ev.cache_misses
-    schedules: list[Schedule] = []
-    times: list[float] = []
-    seen: set[tuple] = set()
-    n_proposed = 0
-    stalled = 0
-
-    try:
-        while ((budget is None or n_proposed < budget) and
-               (sim_budget is None
-                or ev.cache_misses - misses0 < sim_budget)):
-            ask = batch_size if budget is None else \
-                min(batch_size, budget - n_proposed)
-            batch = strategy.propose(ask)[:ask]
-            if not batch:
-                break
-            n_proposed += len(batch)
-            batch_misses0 = ev.cache_misses
-            for schedule, (key, t) in zip(batch, ev.evaluate_keyed(batch)):
-                strategy.observe(schedule, t)
-                if key not in seen:
-                    seen.add(key)
-                    schedules.append(schedule)
-                    times.append(t)
-            if sim_budget is not None or budget is None:
-                if ev.cache_misses == batch_misses0:
-                    stalled += len(batch)
-                    if stalled >= stall_limit:
-                        break
-                else:
-                    stalled = 0
-    finally:
-        if owns_evaluator:
-            ev.close()
-
-    return SearchResult(graph=graph, schedules=schedules, times=times,
-                        n_proposed=n_proposed,
-                        cache_hits=ev.cache_hits - hits0,
-                        cache_misses=ev.cache_misses - misses0)
+    # Lazy: repro.driver.driver imports this module for SearchResult.
+    from repro.driver.driver import SearchDriver
+    return SearchDriver(graph, strategy, machine=machine, budget=budget,
+                        batch_size=batch_size, evaluator=evaluator,
+                        backend=backend, backend_kwargs=backend_kwargs,
+                        sim_budget=sim_budget,
+                        stall_limit=stall_limit).run()

@@ -40,6 +40,49 @@ class SearchStrategy(Protocol):
         ...
 
 
+@runtime_checkable
+class PoolSearchStrategy(SearchStrategy, Protocol):
+    """The pool-proposal extension: screening split out of ``propose``.
+
+    Two-stage strategies internally do *pool -> rank -> top-k*; this
+    protocol exposes the stages so the acquisition-aware driver
+    (:class:`repro.driver.SearchDriver`) can substitute its own
+    ranking while the strategy keeps candidate generation, RNG state,
+    and screening bookkeeping. A conforming strategy's ``propose(k)``
+    must equal ``pad(screen(propose_pool(k), k, <default acq>), k)``
+    whenever ``propose_pool`` returns a pool — so driving through
+    either path is the same search.
+
+    ``propose_pool(budget)``
+        The raw candidate pool a ``propose(budget)`` call would screen
+        (novel, canonical, deduped), or ``None`` when screening does
+        not apply yet (warmup: the driver falls back to ``propose``).
+    ``screen(pool, budget, acquisition)``
+        Rank ``pool`` with ``acquisition(surrogate, pool, best=...)``
+        and return the chosen ``<= budget`` schedules, recording
+        whatever the strategy logs about screening (pending
+        predictions, counters). Pools no larger than ``budget`` pass
+        through unranked.
+    ``pad(chosen, budget)``
+        Fill ``chosen`` up to ``budget`` (e.g. with uniform rollouts)
+        so the search loop is never starved.
+
+    :class:`repro.search.surrogate.SurrogateGuided` is the reference
+    implementation.
+    """
+
+    def propose_pool(self, budget: int) -> list[Schedule] | None:
+        ...
+
+    def screen(self, pool: list[Schedule], budget: int,
+               acquisition) -> list[Schedule]:
+        ...
+
+    def pad(self, chosen: list[Schedule],
+            budget: int) -> list[Schedule]:
+        ...
+
+
 def eligible_items(graph: Graph, prefix: list[BoundOp],
                    n_streams: int) -> list[BoundOp]:
     """Eligible next items from a prefix, stream-bijection pruned.

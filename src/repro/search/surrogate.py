@@ -41,8 +41,9 @@ import numpy as np
 from repro.core.costmodel import Machine
 from repro.core.dag import BoundOp, Graph, Schedule
 from repro.core.features import Feature, apply_features
+from repro.driver.acquisitions import resolve_acquisition
+from repro.engine.base import canonical_key
 from repro.rules.boost import GradientBoostedSurrogate, OnlineSurrogateBase
-from repro.search.evaluator import canonical_key
 from repro.search.mcts import MCTSSearch
 from repro.search.strategy import (GreedyCostModel, eligible_items,
                                    random_schedule)
@@ -194,13 +195,29 @@ class SurrogateGuided:
     (both built-ins share it via ``OnlineSurrogateBase``); ``l2`` is
     ridge-only and raises if combined with another name — never
     silently dropped.
+
+    ``acquisition`` selects how the pool is ranked: a
+    :data:`repro.driver.ACQUISITIONS` registry name (``"argmin_topk"``
+    default — rank purely by predicted time, the original behavior;
+    ``"ucb"`` / ``"expected_improvement"`` add the surrogate's
+    predictive uncertainty, which needs a model with
+    ``predict_with_std`` such as ``"boost"``) with
+    ``acquisition_kwargs`` forwarded to its factory, or a pre-built
+    ``acq(surrogate, pool, best=) -> (scores, mu)`` callable. The
+    strategy implements the
+    :class:`~repro.search.strategy.PoolSearchStrategy` protocol
+    (``propose_pool`` / ``screen`` / ``pad``), so
+    :class:`repro.driver.SearchDriver` can also override the
+    acquisition per run without touching strategy state.
     """
 
     def __init__(self, graph: Graph, n_streams: int, seed: int = 0,
                  warmup: int = 32, pool_factor: int = 10,
                  elite_frac: float = 0.25, mutation_prob: float = 0.5,
                  l2: float | None = None, refit_every: int | None = None,
-                 surrogate="ridge", surrogate_kwargs: dict | None = None):
+                 surrogate="ridge", surrogate_kwargs: dict | None = None,
+                 acquisition="argmin_topk",
+                 acquisition_kwargs: dict | None = None):
         if pool_factor < 1:
             raise ValueError("pool_factor must be >= 1")
         self.graph = graph
@@ -229,6 +246,8 @@ class SurrogateGuided:
                     "surrogate is a registry name, not a pre-built "
                     "object")
             self.surrogate = surrogate
+        self.acquisition = resolve_acquisition(acquisition,
+                                               acquisition_kwargs)
         self._observed: dict[tuple, float] = {}     # canonical key -> time
         self._elites: list[tuple[float, Schedule]] = []
         self._pending: dict[tuple, float] = {}      # key -> predicted time
@@ -267,27 +286,62 @@ class SurrogateGuided:
             pool.append(s)
         return pool
 
+    # -- pool protocol (PoolSearchStrategy) ----------------------------
+    def propose_pool(self, budget: int) -> list[Schedule] | None:
+        """The raw candidate pool one ``propose(budget)`` would screen.
+
+        ``None`` while the surrogate is still warming up (nothing to
+        fit — ``propose`` falls back to uniform rollouts), else up to
+        ``pool_factor * budget`` novel candidates.
+        """
+        if budget <= 0 or self.surrogate.n_observations < self.warmup:
+            return None
+        return self._pool(self.pool_factor * budget)
+
+    def best_observed(self) -> float | None:
+        """Best simulated time seen so far (the EI incumbent)."""
+        return self._elites[0][0] if self._elites else None
+
+    def screen(self, pool: list[Schedule], budget: int,
+               acquisition) -> list[Schedule]:
+        """Rank ``pool`` with ``acquisition`` and keep the best ``budget``.
+
+        Pools no larger than ``budget`` pass through unranked (space
+        nearly exhausted: nothing to screen). Every chosen candidate's
+        *predicted time* — the acquisition's ``mu``, never its score —
+        is parked in the pending log so ``screening_quality()``
+        compares predictions against simulation regardless of which
+        acquisition ranked the pool.
+        """
+        if len(pool) <= budget:
+            return list(pool)
+        scores, preds = acquisition(self.surrogate, pool,
+                                    best=self.best_observed())
+        self.n_screened += len(pool)
+        top = np.argsort(scores, kind="stable")[:budget]
+        chosen = [pool[i] for i in top]
+        for i in top:
+            self._pending[canonical_key(pool[i])] = float(preds[i])
+        return chosen
+
+    def pad(self, chosen: list[Schedule],
+            budget: int) -> list[Schedule]:
+        """Fill with uniform rollouts — never starve the search loop."""
+        while len(chosen) < budget:
+            chosen.append(random_schedule(self.graph, self.n_streams,
+                                          self.rng))
+        return chosen
+
     # -- strategy protocol ---------------------------------------------
     def propose(self, budget: int) -> list[Schedule]:
         if budget <= 0:
             return []
-        if self.surrogate.n_observations < self.warmup:
+        pool = self.propose_pool(budget)
+        if pool is None:  # warmup: nothing to fit yet
             return [random_schedule(self.graph, self.n_streams, self.rng)
                     for _ in range(budget)]
-        pool = self._pool(self.pool_factor * budget)
-        if len(pool) > budget:
-            preds = self.surrogate.predict(pool)
-            self.n_screened += len(pool)
-            top = np.argsort(preds, kind="stable")[:budget]
-            chosen = [pool[i] for i in top]
-            for i in top:
-                self._pending[canonical_key(pool[i])] = float(preds[i])
-        else:
-            chosen = pool  # space nearly exhausted: nothing to screen
-        while len(chosen) < budget:  # never starve the search loop
-            chosen.append(random_schedule(self.graph, self.n_streams,
-                                          self.rng))
-        return chosen
+        return self.pad(self.screen(pool, budget, self.acquisition),
+                        budget)
 
     def observe(self, schedule: Schedule, time: float) -> None:
         key = canonical_key(schedule)
@@ -336,7 +390,11 @@ class PortfolioSearch:
     exploitation phase starts from everything the earlier phases
     learned. ``**surrogate_kwargs`` reaches :class:`SurrogateGuided`,
     so ``PortfolioSearch(..., surrogate="boost")`` exploits with the
-    gradient-boosted tree model.
+    gradient-boosted tree model (and ``acquisition="ucb"`` screens
+    with it). The portfolio also speaks the
+    :class:`~repro.search.strategy.PoolSearchStrategy` protocol by
+    delegating to its exploitation phase, so a driver-level
+    acquisition override reaches the surrogate phase too.
 
     Budget accounting caveat: the greedy phase scores candidate
     extensions with *prefix* simulations of its own
@@ -383,6 +441,26 @@ class PortfolioSearch:
     def observe(self, schedule: Schedule, time: float) -> None:
         self.mcts.observe(schedule, time)
         self.surrogate.observe(schedule, time)
+
+    # -- pool protocol: delegate to the exploitation phase -------------
+    def propose_pool(self, budget: int) -> list[Schedule] | None:
+        """``None`` through the greedy/MCTS phases (those proposals are
+        never screened), then the surrogate phase's raw pool — so an
+        acquisition-overriding :class:`repro.driver.SearchDriver`
+        screens exactly the proposals the built-in acquisition would
+        have. Phase progress is tracked by ``propose``, which the
+        driver still calls whenever this returns ``None``."""
+        if self._n < self.seed_proposals + self.mcts_proposals:
+            return None
+        return self.surrogate.propose_pool(budget)
+
+    def screen(self, pool: list[Schedule], budget: int,
+               acquisition) -> list[Schedule]:
+        return self.surrogate.screen(pool, budget, acquisition)
+
+    def pad(self, chosen: list[Schedule],
+            budget: int) -> list[Schedule]:
+        return self.surrogate.pad(chosen, budget)
 
     def screening_quality(self) -> dict:
         return self.surrogate.screening_quality()
