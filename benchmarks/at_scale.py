@@ -49,7 +49,8 @@ def _race(name: str, graph, sim_budget: int, seed: int = 0) -> list[str]:
         f"classes={rs['n_classes']}/rulesets={rs['n_rulesets']}/"
         f"err={rs['training_error']:.3f}",
         f"at_scale_{name}_evaluator,{wall_p:.2f},"
-        f"backend={st['backend']}/hits={st['hits']}/"
+        f"backend={st['backend']}/memory_hits={st['memory_hits']}/"
+        f"store_hits={st['store_hits']}/"
         f"misses={st['misses']}/size={st['size']}/"
         f"hit_rate={st['hit_rate']:.2f}",
         f"at_scale_{name}_sims,{wall_p:.2f},"

@@ -1,4 +1,5 @@
-"""Evaluation-engine race: serial vs vectorized vs process pool.
+"""Evaluation-engine race: serial vs vectorized vs process pool, plus
+the persistent-store warm-vs-cold pair.
 
 The evaluator is the search pipeline's bottleneck resource; this bench
 measures exactly what ``run_search`` buys from each backend — time to
@@ -7,11 +8,19 @@ full evaluator contract (canonical keys, memo cache, accounting), plus
 the exhaustive paper-SpMV space as a bit-identity checksum. Analytic
 backends must agree float-for-float; the rows report the per-backend
 throughput and the speedup over the serial reference.
+
+The ``engine_store_{cold,warm}`` rows measure the cross-run cache
+(:mod:`repro.engine.store`): the same traffic through a fresh
+evaluator, first against an empty store file (cold: every schedule
+simulated + written through) and then against the warmed file (warm:
+every schedule replayed from disk, zero simulations) — the CI/sweep
+warm-start speedup, with the identity verdict in the derived column.
 """
 from __future__ import annotations
 
 import os
 import random
+import tempfile
 import time
 
 import repro.engine as E
@@ -86,4 +95,38 @@ def engine_benches(n_schedules: int = N_SCHEDULES) -> list[str]:
                       f"x_vs_serial_{ident}"
         rows.append(f"engine_{backend}_halo3d_{len(schedules)},"
                     f"{us:.2f},{derived}")
+    rows.extend(store_benches(g, schedules))
+    return rows
+
+
+def store_benches(graph, schedules) -> list[str]:
+    """Warm-vs-cold rows for the persistent evaluation store."""
+    rows = []
+    n = len(schedules)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "bench.evalstore")
+        best_cold = best_warm = float("inf")
+        warm_out = None
+        for rep in range(3):
+            rep_path = f"{path}.{rep}"
+            with E.make_evaluator(graph, "sim",
+                                  store_path=rep_path) as ev:
+                t0 = time.perf_counter()
+                cold_out = ev.evaluate(schedules)
+                best_cold = min(best_cold, time.perf_counter() - t0)
+                assert ev.cache_misses == n
+            with E.make_evaluator(graph, "sim",
+                                  store_path=rep_path) as ev:
+                t0 = time.perf_counter()
+                warm_out = ev.evaluate(schedules)
+                best_warm = min(best_warm, time.perf_counter() - t0)
+                assert (ev.store_hits, ev.cache_misses) == (n, 0)
+            size_kb = os.path.getsize(rep_path) / 1024
+        ident = "identical" if warm_out == cold_out else "MISMATCH"
+        rows.append(f"engine_store_cold_halo3d_{n},"
+                    f"{best_cold / n * 1e6:.2f},"
+                    f"store_{size_kb:.0f}KiB")
+        rows.append(f"engine_store_warm_halo3d_{n},"
+                    f"{best_warm / n * 1e6:.2f},"
+                    f"{best_cold / best_warm:.2f}x_vs_cold_{ident}")
     return rows

@@ -100,6 +100,43 @@ def run_backend_smoke(budget: int = 48, seed: int = 0) -> dict:
     return out
 
 
+def run_store_smoke(store_path: str, budget: int = 120,
+                    seed: int = 0) -> dict:
+    """The store validating itself: search twice against ``store_path``.
+
+    The first pass warms the store if it is cold (on a restored CI
+    cache it is already warm and measures nothing); the second pass
+    runs a *fresh* evaluator against the same file and must replay
+    entirely from disk — ``store_hits > 0``, zero measurements,
+    byte-identical times. CI calls this after restoring the store from
+    the workflow cache, so a stale or corrupt cache fails loudly here
+    rather than silently re-simulating.
+    """
+    g = C.spmv_dag()
+
+    def search():
+        return S.run_search(g, S.MCTSSearch(g, 2, seed=seed),
+                            budget=budget, batch_size=8,
+                            backend="vectorized",
+                            store_path=store_path)
+
+    first = search()
+    second = search()
+    assert second.store_hits > 0, \
+        "warm search reported no store hits — the store did not persist"
+    assert second.cache_misses == 0, \
+        f"warm search still measured {second.cache_misses} schedules"
+    assert second.times == first.times, \
+        "warm replay diverged from the previous run"
+    return {
+        "first": {"misses": first.cache_misses,
+                  "store_hits": first.store_hits},
+        "second": {"misses": second.cache_misses,
+                   "store_hits": second.store_hits},
+        "warm_cache_restored": first.cache_misses == 0,
+    }
+
+
 def main() -> None:
     out = run_smoke()
     for k, v in out.items():

@@ -15,7 +15,7 @@ Usage: PYTHONPATH=src python examples/schedule_search.py
            [--strategy portfolio|mcts] [--backend sim|vectorized|pool]
            [--surrogate ridge|boost]
            [--acquisition argmin_topk|ucb|expected_improvement]
-           [--rules [PATH]]
+           [--rules [PATH]] [--store PATH]
 """
 import argparse
 
@@ -78,6 +78,13 @@ def main() -> None:
                          "expected_improvement add the boosted "
                          "ensemble's per-tree uncertainty — pair them "
                          "with --surrogate boost)")
+    ap.add_argument("--store", default=None, metavar="PATH",
+                    help="persistent content-addressed evaluation "
+                         "store (repro.engine.EvalStore): base times "
+                         "measured this run are appended, and a later "
+                         "run on the same graph/machine replays them "
+                         "as store hits without re-simulating — "
+                         "warm-start across processes and backends")
     ap.add_argument("--rules", nargs="?", const="-", default=None,
                     metavar="PATH",
                     help="render the full design-rule report "
@@ -101,7 +108,8 @@ def main() -> None:
     else:
         strategy = S.MCTSSearch(graph, args.channels, seed=0)
     res = S.run_search(graph, strategy, budget=args.iters,
-                       backend=args.backend, batch_size=args.batch_size)
+                       backend=args.backend, batch_size=args.batch_size,
+                       store_path=args.store)
     times = res.times_array()
     best, best_t = res.best()
     print(f"explored {len(res.schedules)} schedules "
@@ -109,6 +117,9 @@ def main() -> None:
           f"best {times.min() * 1e3:.2f} ms, "
           f"worst {times.max() * 1e3:.2f} ms "
           f"({times.max() / times.min():.2f}x)")
+    if args.store is not None:
+        print(f"evaluation store {args.store}: {res.store_hits} warm "
+              f"hits, {res.cache_misses} new measurements appended")
     if args.strategy == "portfolio":
         q = strategy.screening_quality()
         print(f"surrogate screened {q['n_screened']} candidates "

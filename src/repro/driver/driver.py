@@ -66,8 +66,15 @@ class SearchDriver:
     docstring for budget/sim_budget/batch_size/stall_limit); the
     driver-only knobs are ``acquisition`` / ``acquisition_kwargs``
     (registry name or a pre-built ``acq(surrogate, pool, best=)``
-    callable) and ``sinks`` (registry names or pre-built objects; the
-    caller owns sink lifecycle — the driver only ``consume``\\ s).
+    callable), ``sinks`` (registry names or pre-built objects; the
+    caller owns sink lifecycle — the driver only ``consume``\\ s), and
+    the persistent evaluation store (``store=`` a shared
+    :class:`~repro.engine.store.EvalStore` / ``store_path=`` a file
+    the evaluator opens and owns) forwarded to the evaluator the
+    driver constructs — with it, ``sim_budget`` and the stall detector
+    meter fresh evaluations (misses + store hits), so a warm search
+    replays the cold trajectory byte-identically at zero measurement
+    cost.
     """
 
     def __init__(self, graph: Graph, strategy: SearchStrategy,
@@ -79,6 +86,8 @@ class SearchDriver:
                  backend_kwargs: dict | None = None,
                  sim_budget: int | None = None,
                  stall_limit: int = 1000,
+                 store=None,
+                 store_path: "str | None" = None,
                  acquisition: "str | AcquisitionFn | None" = None,
                  acquisition_kwargs: dict | None = None,
                  sinks: "tuple | list" = ()):
@@ -94,6 +103,19 @@ class SearchDriver:
         if acquisition is None and acquisition_kwargs is not None:
             raise ValueError(
                 "acquisition_kwargs requires acquisition=")
+        if evaluator is not None and (store is not None
+                                      or store_path is not None):
+            raise ValueError(
+                "pass store=/store_path= only when the driver builds "
+                "the evaluator; attach the store to your preconfigured "
+                "evaluator= instead")
+        if store is not None and store_path is not None:
+            raise ValueError("pass store= or store_path=, not both")
+        for k in ("store", "store_path"):
+            if backend_kwargs and k in backend_kwargs and (
+                    store is not None or store_path is not None):
+                raise ValueError(
+                    f"{k} passed both directly and in backend_kwargs")
         self.graph = graph
         self.strategy = strategy
         self.machine = machine
@@ -102,6 +124,8 @@ class SearchDriver:
         self.evaluator = evaluator
         self.backend = backend
         self.backend_kwargs = backend_kwargs
+        self.store = store
+        self.store_path = store_path
         self.sim_budget = sim_budget
         self.stall_limit = stall_limit
         self.acquisition = None if acquisition is None else \
@@ -144,13 +168,24 @@ class SearchDriver:
                 "observations; construct a fresh driver instead")
         self._ran = True
         owns_evaluator = self.evaluator is None
+        kwargs = dict(self.backend_kwargs or {})
+        if self.store is not None:
+            kwargs["store"] = self.store
+        if self.store_path is not None:
+            kwargs["store_path"] = self.store_path
         ev = self.evaluator if self.evaluator is not None else \
             make_evaluator(self.graph, self.backend or "sim",
-                           machine=self.machine,
-                           **(self.backend_kwargs or {}))
+                           machine=self.machine, **kwargs)
         budget, batch_size = self.budget, self.batch_size
         sim_budget, stall_limit = self.sim_budget, self.stall_limit
         hits0, misses0 = ev.cache_hits, ev.cache_misses
+        store0 = ev.store_hits
+        # sim_budget and the stall detector meter *fresh evaluations*
+        # (paid measurements + store warm hits), so a search against a
+        # warmed persistent store replays the cold run's trajectory —
+        # byte-identical results — instead of running unbounded on free
+        # lookups. Storeless, fresh == misses: the pre-store semantics.
+        fresh0 = ev.fresh_evals()
         schedules: list[Schedule] = []
         times: list[float] = []
         seen: set[bytes] = set()
@@ -160,14 +195,14 @@ class SearchDriver:
         try:
             while ((budget is None or n_proposed < budget) and
                    (sim_budget is None
-                    or ev.cache_misses - misses0 < sim_budget)):
+                    or ev.fresh_evals() - fresh0 < sim_budget)):
                 ask = batch_size if budget is None else \
                     min(batch_size, budget - n_proposed)
                 batch = self._choose(ask)
                 if not batch:
                     break
                 n_proposed += len(batch)
-                batch_misses0 = ev.cache_misses
+                batch_fresh0 = ev.fresh_evals()
                 eb = ev.evaluate_batch(batch)
                 fresh = np.zeros(len(eb), dtype=bool)
                 for i, (schedule, key, t) in enumerate(eb):
@@ -180,7 +215,7 @@ class SearchDriver:
                 for sink in self.sinks:
                     sink.consume(eb, fresh)
                 if sim_budget is not None or budget is None:
-                    if ev.cache_misses == batch_misses0:
+                    if ev.fresh_evals() == batch_fresh0:
                         stalled += len(batch)
                         if stalled >= stall_limit:
                             break
@@ -193,4 +228,5 @@ class SearchDriver:
         return SearchResult(graph=self.graph, schedules=schedules,
                             times=times, n_proposed=n_proposed,
                             cache_hits=ev.cache_hits - hits0,
-                            cache_misses=ev.cache_misses - misses0)
+                            cache_misses=ev.cache_misses - misses0,
+                            store_hits=ev.store_hits - store0)

@@ -87,12 +87,24 @@ class StreamingHistogram:
         if self.hi == 0.0:
             self.hi = vmax * 2.0 if vmax > 0.0 else 1.0
         while vmax >= self.hi:
+            # Doubling merges adjacent bin pairs: counts are preserved
+            # exactly, and because the doubled edges coincide with
+            # every second old edge (scaling by 2 is exact in binary
+            # floating point), the merged counts are exactly what
+            # np.histogram would produce over the new edges.
             self.counts = (self.counts[0::2] + self.counts[1::2])
             self.counts = np.concatenate(
                 [self.counts, np.zeros(self.n_bins // 2, np.int64)])
             self.hi *= 2.0
         idx = np.minimum((v / self.hi * self.n_bins).astype(np.int64),
                          self.n_bins - 1)
+        # np.histogram's boundary correction: the scaled floor can land
+        # one bin off when v sits within a rounding error of an edge;
+        # nudge against the actual edges so counts match np.histogram
+        # on edges() bin for bin.
+        edges = self.edges()
+        idx[v < edges[idx]] -= 1
+        idx[(v >= edges[idx + 1]) & (idx != self.n_bins - 1)] += 1
         np.add.at(self.counts, idx, 1)
 
     @property

@@ -30,6 +30,7 @@ from repro.core.dag import Graph
 from repro.engine.base import (BatchEvaluator, EvalBatch, EvaluatorBase,
                                canonical_key)
 from repro.engine.pool import PoolEvaluator
+from repro.engine.store import EvalStore, store_fingerprint
 from repro.engine.vectorized import (GraphTables, VectorizedEvaluator,
                                      simulate_batch, simulate_encoded)
 from repro.engine.wallclock import (ExecutorEvaluator, demo_spmv_impls,
@@ -56,8 +57,11 @@ def make_evaluator(graph: Graph, backend: str = "sim", *,
     """Construct the named evaluation backend for ``graph``.
 
     ``kwargs`` are backend-specific (``n_workers`` for ``pool``;
-    ``impls``/``env``/``repeats`` for ``wallclock``; ``noise_sigma`` /
-    ``noise_seed`` everywhere).
+    ``impls``/``env``/``repeats`` for ``wallclock``) plus the shared
+    base-layer knobs everywhere: ``noise_sigma`` / ``noise_seed`` and
+    the persistent cross-run store (``store=`` a shared
+    :class:`~repro.engine.store.EvalStore`, or ``store_path=`` a file
+    the evaluator opens and owns; see engine/README.md).
     """
     try:
         cls = BACKENDS[backend]
@@ -74,6 +78,7 @@ __all__ = [
     "VectorizedEvaluator", "GraphTables", "simulate_batch",
     "simulate_encoded",
     "PoolEvaluator",
+    "EvalStore", "store_fingerprint",
     "ExecutorEvaluator", "demo_spmv_impls", "reference_schedule",
     "Machine",
 ]

@@ -13,8 +13,15 @@ therefore identical across backends:
   * the transposition/memo cache keyed on the canonical schedule hash
     (stream-bijection normal form, §III-C2) — each distinct
     implementation is measured exactly once;
-  * ``cache_hits`` / ``cache_misses`` accounting — the meter behind
-    ``run_search(sim_budget=N)``, so equal-simulation comparisons mean
+  * the optional persistent store seam (``store=`` / ``store_path=``,
+    :mod:`repro.engine.store`): looked up *between* the in-memory
+    cache and ``_measure_batch``, written back after every
+    measurement, so a search against a warmed store replays without
+    measuring anything — while a cold run with a store attached stays
+    byte-identical to a storeless run;
+  * ``cache_hits`` / ``store_hits`` / ``cache_misses`` accounting —
+    the three-way meter behind ``run_search(sim_budget=N)`` and the
+    service QoS/billing signal, so equal-simulation comparisons mean
     the same thing no matter which backend ran them;
   * measurement noise: with ``noise_sigma`` set, every evaluation draws
     multiplicative Gaussian jitter seeded per **(canonical key, draw
@@ -39,6 +46,7 @@ import numpy as np
 
 from repro.core.costmodel import Machine, op_durations, simulate
 from repro.core.dag import Graph, Schedule
+from repro.engine.store import EvalStore, store_fingerprint
 
 
 def canonical_key(schedule: Schedule) -> tuple:
@@ -112,7 +120,14 @@ class EvaluatorBase:
     backend = "abstract"
 
     def __init__(self, graph: Graph, machine: Machine | None = None,
-                 noise_sigma: float = 0.0, noise_seed: int = 0):
+                 noise_sigma: float = 0.0, noise_seed: int = 0,
+                 store: EvalStore | None = None,
+                 store_path: "str | None" = None,
+                 store_tag: str = ""):
+        if store is not None and store_path is not None:
+            raise ValueError(
+                "pass store= (a shared EvalStore) or store_path= "
+                "(a file the evaluator opens and owns), not both")
         self.graph = graph
         self.machine = machine or Machine()
         self.noise_sigma = noise_sigma
@@ -121,21 +136,63 @@ class EvaluatorBase:
         self._durations = op_durations(graph, self.machine)
         self._op_id = {n: i for i, n in enumerate(graph.ops)}
         self._cache: dict[bytes, float] = {}
+        self._salvaged: set[bytes] = set()
         self.cache_hits = 0
+        self.store_hits = 0
         self.cache_misses = 0
+        self._owns_store = store_path is not None
+        self.store = EvalStore(store_path) if store_path is not None \
+            else store
+        self.store_tag = store_tag
+        self._fingerprint: bytes | None = None
 
     def __len__(self) -> int:
         return len(self._cache)
 
+    # -- persistent store --------------------------------------------------
+    def _objective_key(self) -> str:
+        """What quantity ``_measure_batch`` estimates.
+
+        The bit-identical analytic family (sim/vectorized/pool) shares
+        ``"analytic"`` on purpose — their stored times are
+        interchangeable, so they warm-start each other. Backends with a
+        different objective (wallclock) must override so their results
+        can never collide with analytic ones.
+        """
+        return "analytic"
+
+    @property
+    def store_fingerprint(self) -> bytes:
+        """Content address of this evaluator's measurement semantics
+        (see :func:`repro.engine.store.store_fingerprint`); lazy so
+        subclass ``__init__`` can finish configuring the objective."""
+        if self._fingerprint is None:
+            objective = self._objective_key()
+            if self.store_tag:
+                objective += f":{self.store_tag}"
+            self._fingerprint = store_fingerprint(
+                self.graph, self.machine, self._durations, objective)
+        return self._fingerprint
+
+    def fresh_evals(self) -> int:
+        """First-time evaluations of distinct implementations — paid
+        measurements plus store warm hits. This is what
+        ``run_search(sim_budget=)`` meters, so a warmed search replays
+        the cold trajectory exactly instead of running unbounded."""
+        return self.cache_misses + self.store_hits
+
     def stats(self) -> dict:
-        """Cache traffic summary: {backend, hits, misses, size, hit_rate}."""
-        total = self.cache_hits + self.cache_misses
+        """Cache traffic summary (the QoS/billing meter):
+        {backend, memory_hits, store_hits, misses, size, hit_rate}."""
+        served = self.cache_hits + self.store_hits
+        total = served + self.cache_misses
         return {
             "backend": self.backend,
-            "hits": self.cache_hits,
+            "memory_hits": self.cache_hits,
+            "store_hits": self.store_hits,
             "misses": self.cache_misses,
             "size": len(self._cache),
-            "hit_rate": self.cache_hits / total if total else 0.0,
+            "hit_rate": served / total if total else 0.0,
         }
 
     # -- the backend hook --------------------------------------------------
@@ -163,7 +220,10 @@ class EvaluatorBase:
         :func:`canonical_key` computes, in a form the whole batch
         shares with the array backends. The first-use relabel is itself
         vectorized (first-occurrence position per stream,
-        stable-argsorted into ranks).
+        stable-argsorted into ranks) over the *distinct* stream ids
+        present in the batch — never ``max(id) + 1`` slots — so sparse
+        ids (stream ``10**6``) cost what dense ids cost instead of
+        allocating gigabytes.
         """
         op_id = self._op_id
         n = len(op_id)
@@ -185,23 +245,29 @@ class EvaluatorBase:
         enc[:, 1, :] = np.fromiter(sts, np.int32,
                                    count=b_n * n).reshape(b_n, n)
         streams = enc[:, 1, :]
-        s_max = int(streams.max()) if streams.size else -1
-        if s_max >= 0:
-            n_streams = s_max + 1
+        uniq = np.unique(streams)
+        uniq = uniq[uniq >= 0]               # distinct real ids, sorted
+        if uniq.size:
+            d = uniq.size
             pos = np.arange(n, dtype=np.int32)
             first = np.where(
-                streams[:, :, None] == np.arange(n_streams,
-                                                 dtype=np.int32),
-                pos[None, :, None], n).min(axis=1)      # (B, S)
+                streams[:, :, None] == uniq[None, None, :],
+                pos[None, :, None], n).min(axis=1)      # (B, D)
+            # Ids absent from a row have first == n and stable-sort
+            # last, so present ids get ranks 0..p-1 in first-use order
+            # (same labels the dense 0..max relabel assigned) and the
+            # padding ranks are never looked up.
             by_first = np.argsort(first, axis=1, kind="stable")
             label = np.empty_like(by_first)
             np.put_along_axis(
                 label, by_first,
-                np.arange(n_streams)[None, :], axis=1)
-            row_base = (np.arange(b_n) * n_streams)[:, None]
+                np.arange(d)[None, :], axis=1)
+            col = np.searchsorted(
+                uniq, np.where(streams < 0, uniq[0], streams))
+            row_base = (np.arange(b_n) * d)[:, None]
             enc[:, 1, :] = np.where(
                 streams >= 0,
-                label.ravel()[row_base + np.maximum(streams, 0)],
+                label.ravel()[row_base + col],
                 -1)
         return [row.tobytes() for row in enc], enc
 
@@ -226,11 +292,19 @@ class EvaluatorBase:
         miss_keys: list[bytes] = []
         miss_rows: list[int] = []
         pending: set[bytes] = set()
+        warm: set[bytes] = set()     # served by the persistent store
         for b, key in enumerate(keys):
-            if key not in self._cache and key not in pending:
-                pending.add(key)
-                miss_keys.append(key)
-                miss_rows.append(b)
+            if key in self._cache or key in pending:
+                continue
+            if self.store is not None:
+                t = self.store.get(self.store_fingerprint, key)
+                if t is not None:
+                    self._cache[key] = t
+                    warm.add(key)
+                    continue
+            pending.add(key)
+            miss_keys.append(key)
+            miss_rows.append(b)
         if miss_rows:
             miss_scheds = [schedules[b] for b in miss_rows]
             measured = self._measure_batch(miss_scheds,
@@ -242,11 +316,25 @@ class EvaluatorBase:
                     "schedules")
             for key, t in zip(miss_keys, measured):
                 self._cache[key] = float(t)
+            if self.store is not None:
+                self.store.put_many(
+                    self.store_fingerprint,
+                    [(key, self._cache[key]) for key in miss_keys])
 
         out: list[tuple[bytes, float]] = []
         for key in keys:
             if key in pending:       # first occurrence of a fresh miss
                 pending.discard(key)
+                self.cache_misses += 1
+            elif key in warm:        # first occurrence of a store hit
+                warm.discard(key)
+                self.store_hits += 1
+            elif key in self._salvaged:
+                # A measurement salvaged from an aborted batch (e.g. a
+                # wallclock value-gate failure) was paid but never
+                # counted; its first post-salvage lookup is a miss, not
+                # a hit, so sim_budget accounting stays honest.
+                self._salvaged.discard(key)
                 self.cache_misses += 1
             else:
                 self.cache_hits += 1
@@ -273,8 +361,35 @@ class EvaluatorBase:
     def evaluate_one(self, schedule: Schedule) -> float:
         return self.evaluate([schedule])[0]
 
+    def _salvage_partial(self, encoded: np.ndarray,
+                         times: Sequence[float]) -> None:
+        """Bank completed measurements from an aborted ``_measure_batch``.
+
+        Backends whose measurements are expensive call this from their
+        failure path (see :mod:`repro.engine.wallclock`): the finished
+        ``(encoded row, time)`` pairs land in the memo cache — and the
+        persistent store, they were paid for — so a retry does not
+        re-measure them. The keys are remembered as *salvaged* so their
+        first later lookup counts as a miss (the measurement was real
+        work that no meter has seen yet), never as a free hit.
+        """
+        items = []
+        for row, t in zip(encoded, times):
+            key = row.tobytes()
+            self._cache[key] = float(t)
+            self._salvaged.add(key)
+            items.append((key, float(t)))
+        if self.store is not None and items:
+            self.store.put_many(self.store_fingerprint, items)
+
     def close(self) -> None:
-        """Release backend resources (worker pools etc.); idempotent."""
+        """Release backend resources (worker pools, an owned store);
+        idempotent. A store opened by this evaluator (``store_path=``)
+        is closed; a shared ``store=`` stays the caller's."""
+        if getattr(self, "_owns_store", False) and self.store is not None:
+            self.store.close()
+            self.store = None
+            self._owns_store = False
 
     def __enter__(self) -> "EvaluatorBase":
         return self

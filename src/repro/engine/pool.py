@@ -80,8 +80,9 @@ class PoolEvaluator(EvaluatorBase):
     def __init__(self, graph: Graph, machine: Machine | None = None,
                  noise_sigma: float = 0.0, noise_seed: int = 0,
                  n_workers: int | None = None, min_shard: int = 8,
-                 start_method: str | None = None):
-        super().__init__(graph, machine, noise_sigma, noise_seed)
+                 start_method: str | None = None, **base_kwargs):
+        super().__init__(graph, machine, noise_sigma, noise_seed,
+                         **base_kwargs)
         self.n_workers = n_workers or (os.cpu_count() or 2)
         self.min_shard = max(1, min_shard)
         if start_method is None:
@@ -115,14 +116,30 @@ class PoolEvaluator(EvaluatorBase):
         return out
 
     def close(self) -> None:
+        """Graceful teardown: let in-flight shards finish, then reap.
+
+        ``Pool.close()`` + ``join()`` — never ``terminate()`` here,
+        which would kill workers mid-shard and lose paid simulations.
+        Idempotent; the pool is re-created lazily on next use.
+        """
         if self._pool is not None:
-            self._pool.terminate()
+            self._pool.close()
             self._pool.join()
             self._pool = None
+        super().close()
 
-    def __del__(self):  # best-effort; context-manager close preferred
+    def __del__(self):
+        # Last-resort fallback only: at interpreter shutdown a graceful
+        # close()+join() may deadlock on already-collected machinery,
+        # so terminate() is correct *here* (and only here). Guard
+        # everything — modules can be half torn down by the time
+        # __del__ runs.
         try:
-            self.close()
+            pool = getattr(self, "_pool", None)
+            if pool is not None:
+                pool.terminate()
+                pool.join()
+                self._pool = None
         except Exception:
             pass
 

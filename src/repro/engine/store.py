@@ -1,0 +1,230 @@
+"""Persistent content-addressed evaluation store: measurements that
+outlive the process.
+
+The paper's whole cost is measurement — MCTS explores an enormous
+schedule space and every node expansion pays a simulation or a
+wall-clock run, so the memo cache *is* the budget (§III,
+``sim_budget``). :class:`~repro.engine.base.EvaluatorBase` already
+keys everything on canonical ``(B, 2, N)`` row bytes; this module adds
+the one missing layer — an on-disk store keyed by
+``(fingerprint, canonical row bytes) -> base time`` — so every search
+(CI runs, benchmark sweeps, many users tuning the same graph) starts
+warm instead of re-simulating from zero.
+
+Contracts:
+
+* **Content-addressed.** The fingerprint
+  (:func:`store_fingerprint`) hashes the graph's ops and edges, the
+  machine/durations table, and the backend's objective identity, so
+  results from different graphs, machines, or objectives can never
+  collide — one store file safely serves many searches.
+* **Noiseless base times only.** Measurement noise stays parent-side,
+  seeded per ``(canonical key, draw index)``
+  (see :mod:`repro.engine.base`), so the store holds the underlying
+  base time and noisy searches are bit-reproducible warm or cold.
+* **Crash-safe, append-only.** Records are length-prefixed and
+  CRC-checksummed; writers only ever append whole records with a
+  single ``O_APPEND`` write, so concurrent writers interleave at
+  record granularity and a crash can corrupt at most the file tail.
+  :meth:`EvalStore.open`-time parsing truncates a corrupt tail and
+  keeps every intact record.
+
+File format (little-endian)::
+
+    magic:  b"REPRO-EVALSTORE-v1\\n"
+    record: u32 payload_len | payload | u32 crc32(payload)
+    payload: fingerprint (16 bytes) | canonical row bytes | f64 time
+
+Duplicate keys may appear in the file (concurrent writers racing the
+same miss); the first record wins on load — all writers of a given
+``(fingerprint, key)`` measured the same deterministic quantity.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import struct
+import zlib
+from typing import Iterable
+
+from repro.core.costmodel import Machine
+from repro.core.dag import Graph
+
+MAGIC = b"REPRO-EVALSTORE-v1\n"
+FINGERPRINT_SIZE = 16
+_LEN = struct.Struct("<I")
+_TIME = struct.Struct("<d")
+# payload = fingerprint + key (>= 1 encoded position = 8 bytes) + time
+_MIN_PAYLOAD = FINGERPRINT_SIZE + _TIME.size
+
+
+def store_fingerprint(graph: Graph, machine: Machine,
+                      durations: dict[str, float],
+                      objective: str) -> bytes:
+    """16-byte content address of *what a base time means*.
+
+    Hashes everything that determines the mapping
+    ``canonical row bytes -> base time``: the graph's ops (all cost
+    metadata — the canonical encoding only carries op *indices*, so op
+    identity must come from here), its edge set, the machine constants,
+    the resolved per-op duration table, and the backend's objective
+    identity (``"analytic"`` for the bit-identical sim/vectorized/pool
+    family — their results are interchangeable by construction, so they
+    deliberately *share* a fingerprint and warm-start each other —
+    vs ``"wallclock:..."`` for measured time). blake2b is stable
+    across processes and ``PYTHONHASHSEED`` values.
+    """
+    h = hashlib.blake2b(digest_size=FINGERPRINT_SIZE)
+    h.update(b"objective=" + objective.encode() + b"\n")
+    h.update(repr(machine).encode() + b"\n")
+    for name in sorted(graph.ops):
+        op = graph.ops[name]
+        h.update(repr((op.name, op.kind.value, op.flops, op.bytes_hbm,
+                       op.comm_bytes, op.comm_role.value, op.duration,
+                       durations.get(name))).encode())
+    for u in sorted(graph.succs):
+        for v in sorted(graph.succs[u]):
+            h.update(f"edge {u}->{v}\n".encode())
+    return h.digest()
+
+
+class EvalStore:
+    """Append-only on-disk memo of ``(fingerprint, key) -> base time``.
+
+    Opening loads every intact record into memory (lookups are dict
+    hits; the search hot path never touches the disk for reads) and
+    truncates any corrupt tail left by a crashed writer. ``put_many``
+    appends each batch with one ``write`` syscall on an ``O_APPEND``
+    descriptor, so concurrent writers on a local filesystem interleave
+    whole batches. Idempotent: keys already present are not re-written.
+    """
+
+    def __init__(self, path: "str | os.PathLike"):
+        self.path = os.fspath(path)
+        self._mem: dict[bytes, dict[bytes, float]] = {}
+        self.n_records = 0
+        self.n_truncated_bytes = 0
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._fd: int | None = os.open(
+            self.path, os.O_RDWR | os.O_CREAT | os.O_APPEND, 0o644)
+        try:
+            self._load()
+        except Exception:
+            os.close(self._fd)
+            self._fd = None
+            raise
+
+    # -- load / recovery ---------------------------------------------------
+    def _load(self) -> None:
+        size = os.fstat(self._fd).st_size
+        data = os.pread(self._fd, size, 0) if size else b""
+        if not data:
+            os.write(self._fd, MAGIC)
+            return
+        if not data.startswith(MAGIC):
+            raise ValueError(
+                f"{self.path!r} is not an evaluation store "
+                f"(bad magic {data[:8]!r})")
+        off = len(MAGIC)
+        end_ok = off
+        n = len(data)
+        while off + _LEN.size <= n:
+            (plen,) = _LEN.unpack_from(data, off)
+            rec_end = off + _LEN.size + plen + _LEN.size
+            if plen < _MIN_PAYLOAD or rec_end > n:
+                break                      # truncated / nonsense tail
+            payload = data[off + _LEN.size:off + _LEN.size + plen]
+            (crc,) = _LEN.unpack_from(data, rec_end - _LEN.size)
+            if zlib.crc32(payload) != crc:
+                break                      # corrupt tail
+            fp = payload[:FINGERPRINT_SIZE]
+            key = payload[FINGERPRINT_SIZE:plen - _TIME.size]
+            (t,) = _TIME.unpack_from(payload, plen - _TIME.size)
+            self._mem.setdefault(fp, {}).setdefault(key, t)
+            self.n_records += 1
+            off = end_ok = rec_end
+        if end_ok < n:
+            self.n_truncated_bytes = n - end_ok
+            os.ftruncate(self._fd, end_ok)
+
+    # -- lookups -----------------------------------------------------------
+    def get(self, fingerprint: bytes, key: bytes) -> float | None:
+        """The stored base time, or ``None`` if never measured."""
+        bucket = self._mem.get(fingerprint)
+        return None if bucket is None else bucket.get(key)
+
+    def __len__(self) -> int:
+        return sum(len(b) for b in self._mem.values())
+
+    def __contains__(self, fp_key: tuple[bytes, bytes]) -> bool:
+        fp, key = fp_key
+        return key in self._mem.get(fp, ())
+
+    def fingerprints(self) -> list[bytes]:
+        return list(self._mem)
+
+    def stats(self) -> dict:
+        return {
+            "path": self.path,
+            "entries": len(self),
+            "fingerprints": len(self._mem),
+            "records_loaded": self.n_records,
+            "truncated_bytes": self.n_truncated_bytes,
+        }
+
+    # -- writes ------------------------------------------------------------
+    def put_many(self, fingerprint: bytes,
+                 items: Iterable[tuple[bytes, float]]) -> int:
+        """Append ``(key, base time)`` pairs; returns how many were new.
+
+        Keys already present are skipped (content-addressed: the value
+        is a pure function of the address). The whole batch goes out as
+        one append so concurrent writers cannot interleave inside it.
+        """
+        if self._fd is None:
+            raise ValueError(f"store {self.path!r} is closed")
+        if len(fingerprint) != FINGERPRINT_SIZE:
+            raise ValueError(
+                f"fingerprint must be {FINGERPRINT_SIZE} bytes")
+        bucket = self._mem.setdefault(fingerprint, {})
+        buf = bytearray()
+        n_new = 0
+        for key, t in items:
+            if key in bucket:
+                continue
+            t = float(t)
+            bucket[key] = t
+            payload = fingerprint + bytes(key) + _TIME.pack(t)
+            buf += _LEN.pack(len(payload))
+            buf += payload
+            buf += _LEN.pack(zlib.crc32(payload))
+            n_new += 1
+        if buf:
+            os.write(self._fd, bytes(buf))
+            self.n_records += n_new
+        return n_new
+
+    def put(self, fingerprint: bytes, key: bytes, t: float) -> int:
+        return self.put_many(fingerprint, [(key, t)])
+
+    # -- lifecycle ---------------------------------------------------------
+    def close(self) -> None:
+        """Close the file descriptor; idempotent. Reads keep working
+        (the in-memory index survives); writes raise."""
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+    def __enter__(self) -> "EvalStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # best-effort; context-manager close preferred
+        try:
+            self.close()
+        except Exception:
+            pass

@@ -360,8 +360,10 @@ class VectorizedEvaluator(EvaluatorBase):
     backend = "vectorized"
 
     def __init__(self, graph: Graph, machine: Machine | None = None,
-                 noise_sigma: float = 0.0, noise_seed: int = 0):
-        super().__init__(graph, machine, noise_sigma, noise_seed)
+                 noise_sigma: float = 0.0, noise_seed: int = 0,
+                 **base_kwargs):
+        super().__init__(graph, machine, noise_sigma, noise_seed,
+                         **base_kwargs)
         self._tables = GraphTables(graph, self.machine, self._durations)
 
     def _measure_batch(self, schedules: Sequence[Schedule],

@@ -67,12 +67,14 @@ class ExecutorEvaluator(EvaluatorBase):
                  impls: Mapping[str, Callable] | None = None,
                  env: Mapping | None = None,
                  repeats: int = 5, warmup: int = 1,
-                 check_values: bool = True, rtol: float = 1e-5):
+                 check_values: bool = True, rtol: float = 1e-5,
+                 **base_kwargs):
         if impls is None or env is None:
             raise ValueError(
                 "wallclock backend needs impls= (op implementations) "
                 "and env= (initial values); see engine/README.md")
-        super().__init__(graph, machine, noise_sigma, noise_seed)
+        super().__init__(graph, machine, noise_sigma, noise_seed,
+                         **base_kwargs)
         self.impls = dict(impls)
         self.env = dict(env)
         self.repeats = max(1, repeats)
@@ -81,6 +83,14 @@ class ExecutorEvaluator(EvaluatorBase):
         self.rtol = rtol
         self.n_checked = 0
         self._reference: dict | None = None
+
+    def _objective_key(self) -> str:
+        """Measured wall-clock time is machine- and protocol-specific:
+        never share store entries with the analytic family, nor with a
+        differently-configured timing protocol. Distinct impl/env sets
+        on the same graph should be disambiguated with ``store_tag=``.
+        """
+        return f"wallclock:repeats={self.repeats}:warmup={self.warmup}"
 
     # -- reference outputs (computed lazily, once) -------------------------
     def _reference_outputs(self) -> dict:
@@ -126,14 +136,12 @@ class ExecutorEvaluator(EvaluatorBase):
         finally:
             # Measurements here are expensive (jit compile + repeats);
             # if a later schedule fails the value gate, salvage the
-            # completed ones into the memo cache so a retry doesn't
-            # re-pay them. On success this is a harmless pre-write of
-            # what the base class records anyway (miss accounting for
-            # an aborted batch stays with the base class's contract:
-            # salvaged entries resurface as hits).
+            # completed ones into the memo cache and persistent store
+            # so a retry doesn't re-pay them. The base class remembers
+            # them as salvaged: their first post-salvage lookup counts
+            # as a miss (the measurement was paid), not a free hit.
             if encoded is not None and len(out) < len(schedules):
-                for row, t in zip(encoded, out):
-                    self._cache[row.tobytes()] = float(t)
+                self._salvage_partial(encoded[:len(out)], out)
         return out
 
 

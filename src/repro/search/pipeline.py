@@ -55,6 +55,9 @@ class SearchResult:
     n_proposed: int
     cache_hits: int
     cache_misses: int
+    # First-time evaluations served by the persistent cross-run store
+    # (repro.engine.store) instead of a paid measurement; 0 storeless.
+    store_hits: int = 0
 
     def best(self) -> tuple[Schedule, float]:
         """The fastest observed (schedule, time).
@@ -95,7 +98,9 @@ def run_search(graph: Graph, strategy: SearchStrategy,
                backend: str | None = None,
                backend_kwargs: dict | None = None,
                sim_budget: int | None = None,
-               stall_limit: int = 1000) -> SearchResult:
+               stall_limit: int = 1000,
+               store=None,
+               store_path: "str | None" = None) -> SearchResult:
     """Drive ``strategy`` for up to ``budget`` evaluations.
 
     ``budget`` counts proposals (evaluations), not distinct schedules;
@@ -133,6 +138,16 @@ def run_search(graph: Graph, strategy: SearchStrategy,
     the search returns; pass a preconfigured ``evaluator`` instead to
     keep its memo cache alive across runs.
 
+    ``store=`` / ``store_path=`` attach the persistent content-
+    addressed evaluation store (:class:`repro.engine.EvalStore`) to the
+    evaluator this call constructs: base times measured here are
+    written through, and a later run — any process, any analytic
+    backend — replays them as ``store_hits`` without measuring,
+    byte-identical to the cold run (``sim_budget`` counts misses +
+    store hits, so warm trajectories match cold ones exactly). Only
+    valid with ``backend=``-style construction; attach the store to
+    your own ``evaluator=`` instead when you pass one.
+
     Every proposal is evaluated and fed back via ``observe``; the result
     keeps the first observation per canonical schedule (matching how the
     paper's MCTS records its rollout set). Pass either ``machine`` or a
@@ -146,5 +161,5 @@ def run_search(graph: Graph, strategy: SearchStrategy,
     return SearchDriver(graph, strategy, machine=machine, budget=budget,
                         batch_size=batch_size, evaluator=evaluator,
                         backend=backend, backend_kwargs=backend_kwargs,
-                        sim_budget=sim_budget,
-                        stall_limit=stall_limit).run()
+                        sim_budget=sim_budget, stall_limit=stall_limit,
+                        store=store, store_path=store_path).run()

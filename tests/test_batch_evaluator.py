@@ -130,16 +130,84 @@ def test_noise_depends_on_seed(spmv_space):
 def test_stats_reports_cache_traffic(spmv_space):
     g, scheds = spmv_space
     ev = S.BatchEvaluator(g)
-    assert ev.stats() == {"backend": "sim", "hits": 0, "misses": 0,
+    assert ev.stats() == {"backend": "sim", "memory_hits": 0,
+                          "store_hits": 0, "misses": 0,
                           "size": 0, "hit_rate": 0.0}
     ev.evaluate(scheds[:20])
     ev.evaluate(scheds[:30])
     st = ev.stats()
     assert st["backend"] == "sim"
     assert st["misses"] == 30
-    assert st["hits"] == 20
+    assert st["memory_hits"] == 20
+    assert st["store_hits"] == 0        # no persistent store attached
     assert st["size"] == len(ev) == 30
     assert st["hit_rate"] == pytest.approx(20 / 50)
+
+
+def test_stats_parity_across_backends(spmv_space):
+    """The QoS meter is backend-independent: the same traffic produces
+    the identical {memory_hits, store_hits, misses} triple on the
+    serial, vectorized, and pool backends."""
+    import repro.engine as E
+    g, scheds = spmv_space
+    traffic = scheds[:25] + scheds[5:15] + scheds[:25]
+    triples = {}
+    for backend, kwargs in (("sim", {}), ("vectorized", {}),
+                            ("pool", {"n_workers": 2, "min_shard": 1})):
+        with E.make_evaluator(g, backend, **kwargs) as ev:
+            ev.evaluate(traffic)
+            st = ev.stats()
+            triples[backend] = (st["memory_hits"], st["store_hits"],
+                                st["misses"])
+    assert triples["sim"] == (35, 0, 25)
+    assert triples["vectorized"] == triples["sim"]
+    assert triples["pool"] == triples["sim"]
+
+
+def test_encode_relabel_handles_sparse_stream_ids(spmv_space):
+    """The batched first-use relabel sizes by *distinct* ids present,
+    not max(id)+1: a schedule using stream 10**6 must encode in peanuts
+    of memory and land in the same cache bucket as its dense twin
+    (bijection-awareness with non-contiguous ids)."""
+    g, scheds = spmv_space
+    two_stream = next(s for s in scheds
+                      if len(set(s.streams().values())) == 2)
+    sparse = Schedule(tuple(
+        BoundOp(i.name,
+                None if i.stream is None else
+                (10 ** 6 if i.stream else 3))
+        for i in two_stream.items))
+    ev = S.BatchEvaluator(g)
+    keys, _ = ev._encode_batch([two_stream, sparse])
+    assert keys[0] == keys[1]           # same canonical identity
+    # And the per-schedule canonical_key agrees on the equivalence.
+    from repro.engine.base import canonical_key
+    assert canonical_key(two_stream) == canonical_key(sparse)
+    t0 = ev.evaluate([two_stream])[0]
+    assert ev.evaluate([sparse])[0] == t0
+    assert (ev.cache_hits, ev.cache_misses) == (1, 1)
+
+
+def test_encode_relabel_matches_canonical_key_mixed_batch(spmv_space):
+    """Batched relabel == per-schedule canonical_key over a batch that
+    mixes dense, sparse, and permuted stream ids."""
+    g, scheds = spmv_space
+    import random
+    rng = random.Random(0)
+    batch = []
+    for s in scheds[:20]:
+        remap = {0: rng.choice([0, 7, 10 ** 6]),
+                 1: rng.choice([1, 3, 99999])}
+        while remap[0] == remap[1]:
+            remap[1] += 1
+        batch.append(Schedule(tuple(
+            BoundOp(i.name,
+                    None if i.stream is None else remap[i.stream])
+            for i in s.items)))
+    ev = S.BatchEvaluator(g)
+    keys, _ = ev._encode_batch(batch)
+    base_keys, _ = ev._encode_batch(scheds[:20])
+    assert keys == base_keys
 
 
 def test_evaluate_one_matches_makespan(spmv_space):

@@ -438,6 +438,39 @@ def test_streaming_histogram_matches_numpy():
     assert h.n == len(vals)
 
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # tier-1 container
+    from _hypothesis_fallback import given, settings, strategies as st
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.lists(st.floats(min_value=0.0, max_value=1e6),
+                         min_size=0, max_size=40),
+                min_size=1, max_size=8),
+       st.integers(min_value=1, max_value=64))
+def test_streaming_histogram_property(batches, half_bins):
+    """Property lock for the doubling fold: (1) every range doubling
+    preserves total counts exactly — observations are merged, never
+    dropped; (2) after any batch sequence, counts equal np.histogram
+    of the folded data on the histogram's own edges()."""
+    h = StreamingHistogram(half_bins=half_bins)
+    seen = []
+    for batch in batches:
+        n_before = h.n
+        h.add(np.asarray(batch, dtype=np.float64))
+        seen.extend(batch)
+        assert h.n == n_before + len(batch)     # doubling loses nothing
+    if not seen:
+        return
+    assert h.counts.size == 2 * half_bins       # footprint is constant
+    edges = h.edges()
+    assert edges[0] == 0.0 and edges[-1] == h.hi
+    assert max(seen) < h.hi or max(seen) == 0.0
+    want, _ = np.histogram(seen, bins=edges)
+    np.testing.assert_array_equal(h.counts, want)
+
+
 # -- SearchResult.best() tie handling (satellite) ----------------------------
 
 def test_best_breaks_ties_by_canonical_encoding():

@@ -99,4 +99,24 @@ def test_pool_stats_reports_backend(pool_ev):
     g, ev = pool_ev
     st = ev.stats()
     assert st["backend"] == "pool"
-    assert set(st) == {"backend", "hits", "misses", "size", "hit_rate"}
+    assert set(st) == {"backend", "memory_hits", "store_hits", "misses",
+                       "size", "hit_rate"}
+
+
+def test_pool_close_is_graceful_and_del_safe():
+    """close() must drain (close+join), never terminate, and __del__
+    must be a no-op after an explicit close."""
+    g = spmv_dag_fine()
+    ev = E.make_evaluator(g, "pool", n_workers=2, min_shard=1)
+    rng = random.Random(11)
+    scheds = [random_schedule(g, 2, rng) for _ in range(16)]
+    first = ev.evaluate(scheds)
+    pool = ev._pool
+    assert pool is not None
+    ev.close()
+    # Graceful teardown leaves completed results intact and the pool
+    # object joined; the evaluator re-creates a pool lazily.
+    assert ev._pool is None
+    assert ev.evaluate(scheds) == first
+    ev.close()
+    ev.__del__()                        # guarded: must never raise

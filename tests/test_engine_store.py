@@ -1,0 +1,378 @@
+"""engine.store: the persistent content-addressed evaluation store.
+
+Locks the PR's acceptance contract:
+
+* a repeated ``run_search`` against a *fresh* evaluator (new process
+  semantics) with ``store_path=`` set performs **zero**
+  ``_measure_batch`` calls on the second run — all store hits — while
+  producing byte-identical ``(features, labels, times)`` to the cold
+  run, on sim / vectorized / pool, noisy and noiseless;
+* a cold run with a store attached is byte-identical to a storeless
+  run (the store is invisible until it is warm);
+* the file format is crash-safe: corrupt tails are truncated on open,
+  intact records always survive, concurrent writers interleave whole
+  records;
+* fingerprints separate graphs, machines, and objectives — results
+  can never collide across them.
+"""
+import os
+import struct
+import zlib
+
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.engine as E
+import repro.search as S
+from repro.core.costmodel import Machine
+from repro.core.dag import spmv_dag_fine
+from repro.engine.store import (FINGERPRINT_SIZE, MAGIC, EvalStore,
+                                store_fingerprint)
+
+
+@pytest.fixture()
+def store_path(tmp_path):
+    return str(tmp_path / "eval.store")
+
+
+def _fp(tag: bytes = b"a") -> bytes:
+    return (tag * FINGERPRINT_SIZE)[:FINGERPRINT_SIZE]
+
+
+# -- the file format ---------------------------------------------------------
+
+def test_store_roundtrip_and_persistence(store_path):
+    fp = _fp()
+    with EvalStore(store_path) as st:
+        assert len(st) == 0
+        assert st.get(fp, b"k1") is None
+        assert st.put_many(fp, [(b"k1", 1.5), (b"k2", 2.5)]) == 2
+        assert st.get(fp, b"k1") == 1.5
+        # Content-addressed: re-putting an existing key is a no-op.
+        assert st.put_many(fp, [(b"k1", 9.9), (b"k3", 3.5)]) == 1
+        assert st.get(fp, b"k1") == 1.5
+    with EvalStore(store_path) as st2:     # fresh process semantics
+        assert len(st2) == 3
+        assert st2.get(fp, b"k1") == 1.5
+        assert st2.get(fp, b"k2") == 2.5
+        assert st2.get(fp, b"k3") == 3.5
+        assert st2.n_truncated_bytes == 0
+
+
+def test_store_truncates_corrupt_tail(store_path):
+    fp = _fp()
+    with EvalStore(store_path) as st:
+        st.put_many(fp, [(b"good1", 1.0), (b"good2", 2.0)])
+    size_ok = os.path.getsize(store_path)
+    # A crashed writer leaves half a record at the tail.
+    with open(store_path, "ab") as f:
+        payload = fp + b"half-written" + struct.pack("<d", 3.0)
+        rec = struct.pack("<I", len(payload)) + payload
+        f.write(rec[:len(rec) - 7])
+    with EvalStore(store_path) as st:
+        assert len(st) == 2                # intact records survive
+        assert st.get(fp, b"good1") == 1.0
+        assert st.n_truncated_bytes > 0
+    assert os.path.getsize(store_path) == size_ok   # tail cut off
+    # And the store keeps working after recovery.
+    with EvalStore(store_path) as st:
+        st.put(fp, b"good3", 3.0)
+    assert EvalStore(store_path).get(fp, b"good3") == 3.0
+
+
+def test_store_truncates_bad_checksum_tail(store_path):
+    fp = _fp()
+    with EvalStore(store_path) as st:
+        st.put(fp, b"keep", 1.0)
+    with open(store_path, "ab") as f:
+        payload = fp + b"flipped" + struct.pack("<d", 2.0)
+        f.write(struct.pack("<I", len(payload)) + payload +
+                struct.pack("<I", zlib.crc32(payload) ^ 0xFF))
+    with EvalStore(store_path) as st:
+        assert len(st) == 1
+        assert st.get(fp, b"keep") == 1.0
+        assert st.n_truncated_bytes > 0
+
+
+def test_store_rejects_foreign_file(tmp_path):
+    path = tmp_path / "not-a-store"
+    path.write_bytes(b"something else entirely")
+    with pytest.raises(ValueError, match="magic"):
+        EvalStore(path)
+
+
+def test_store_concurrent_writers_interleave(store_path):
+    """Two open handles appending alternately (the multi-writer case:
+    both use O_APPEND whole-record writes) — a reopen sees the union."""
+    fp = _fp()
+    a, b = EvalStore(store_path), EvalStore(store_path)
+    a.put(fp, b"from-a-1", 1.0)
+    b.put(fp, b"from-b-1", 2.0)
+    a.put(fp, b"from-a-2", 3.0)
+    b.close(), a.close()
+    with EvalStore(store_path) as st:
+        assert len(st) == 3
+        assert st.get(fp, b"from-b-1") == 2.0
+
+
+def test_store_duplicate_records_first_wins(store_path):
+    """Two racing writers may both append the same key (each checked
+    its own in-memory index); on load the first record wins."""
+    fp = _fp()
+    a, b = EvalStore(store_path), EvalStore(store_path)
+    a.put(fp, b"k", 1.0)
+    b.put(fp, b"k", 2.0)                    # b hasn't seen a's record
+    a.close(), b.close()
+    with EvalStore(store_path) as st:
+        assert len(st) == 1
+        assert st.get(fp, b"k") == 1.0
+
+
+def test_store_write_after_close_raises(store_path):
+    st = EvalStore(store_path)
+    st.put(_fp(), b"k", 1.0)
+    st.close()
+    st.close()                              # idempotent
+    assert st.get(_fp(), b"k") == 1.0       # reads keep working
+    with pytest.raises(ValueError, match="closed"):
+        st.put(_fp(), b"k2", 2.0)
+
+
+# -- the fingerprint contract ------------------------------------------------
+
+def test_fingerprint_separates_graph_machine_objective():
+    g1, g2 = C.spmv_dag(), spmv_dag_fine()
+    m1, m2 = Machine(), Machine(flops_per_s=100e12)
+    from repro.core.costmodel import op_durations
+    fps = {
+        store_fingerprint(g1, m1, op_durations(g1, m1), "analytic"),
+        store_fingerprint(g2, m1, op_durations(g2, m1), "analytic"),
+        store_fingerprint(g1, m2, op_durations(g1, m2), "analytic"),
+        store_fingerprint(g1, m1, op_durations(g1, m1),
+                          "wallclock:repeats=5:warmup=1"),
+    }
+    assert len(fps) == 4                    # pairwise distinct
+    assert all(len(fp) == FINGERPRINT_SIZE for fp in fps)
+    # Deterministic across calls (and across processes by blake2b).
+    assert store_fingerprint(g1, m1, op_durations(g1, m1),
+                             "analytic") in fps
+
+
+def test_analytic_backends_share_fingerprint_wallclock_does_not():
+    g = C.spmv_dag(rows_per_rank=32, nnz_per_rank=128)
+    sim = E.make_evaluator(g, "sim")
+    vec = E.make_evaluator(g, "vectorized")
+    with E.make_evaluator(g, "pool", n_workers=2) as pool:
+        assert sim.store_fingerprint == vec.store_fingerprint \
+            == pool.store_fingerprint
+    impls, env = E.demo_spmv_impls(g, n=8)
+    wc = E.make_evaluator(g, "wallclock", impls=impls, env=env)
+    assert wc.store_fingerprint != sim.store_fingerprint
+    # store_tag separates otherwise-identical configurations.
+    tagged = E.make_evaluator(g, "sim", store_tag="impl-v2")
+    assert tagged.store_fingerprint != sim.store_fingerprint
+
+
+def test_wrong_fingerprint_never_serves(store_path):
+    """Entries written under one graph are invisible to another: the
+    second evaluator re-measures instead of reading a foreign time."""
+    g1, g2 = C.spmv_dag(), spmv_dag_fine()
+    scheds1 = list(C.enumerate_schedules(g1, 2))[:10]
+    scheds2 = list(C.enumerate_schedules(g2, 2))[:10]
+    with EvalStore(store_path) as st:
+        ev1 = E.make_evaluator(g1, "sim", store=st)
+        ev1.evaluate(scheds1)
+        assert ev1.cache_misses == 10
+        ev2 = E.make_evaluator(g2, "sim", store=st)
+        ev2.evaluate(scheds2)
+        assert (ev2.store_hits, ev2.cache_misses) == (0, 10)
+        assert len(st.fingerprints()) == 2
+
+
+# -- the evaluator seam ------------------------------------------------------
+
+def test_store_hit_counts_once_then_memory_hits(store_path):
+    g = C.spmv_dag()
+    scheds = list(C.enumerate_schedules(g, 2))[:8]
+    with E.make_evaluator(g, "sim", store_path=store_path) as ev:
+        cold = ev.evaluate(scheds)
+    ev2 = E.make_evaluator(g, "sim", store_path=store_path)
+    warm = ev2.evaluate(scheds + scheds)
+    assert warm == cold + cold
+    st = ev2.stats()
+    assert (st["memory_hits"], st["store_hits"], st["misses"]) \
+        == (8, 8, 0)
+    assert st["hit_rate"] == 1.0            # nothing was measured
+    ev2.close()
+
+
+def test_cold_run_with_store_is_byte_identical_to_storeless(store_path):
+    g = spmv_dag_fine()
+    res_plain = S.run_search(g, S.MCTSSearch(g, 2, seed=3), budget=80,
+                             batch_size=4, backend="sim")
+    res_store = S.run_search(g, S.MCTSSearch(g, 2, seed=3), budget=80,
+                             batch_size=4, backend="sim",
+                             store_path=store_path)
+    assert res_store.times == res_plain.times
+    assert [s.items for s in res_store.schedules] \
+        == [s.items for s in res_plain.schedules]
+    assert (res_store.cache_hits, res_store.cache_misses) \
+        == (res_plain.cache_hits, res_plain.cache_misses)
+    assert res_plain.store_hits == res_store.store_hits == 0
+    fa, la, ta = res_plain.dataset()
+    fb, lb, tb = res_store.dataset()
+    assert ta.tobytes() == tb.tobytes()
+    assert fa.X.tobytes() == fb.X.tobytes()
+    assert np.array_equal(la.labels, lb.labels)
+
+
+@pytest.mark.parametrize("noise", [0.0, 0.05])
+@pytest.mark.parametrize("backend,kwargs", [
+    ("sim", {}),
+    ("vectorized", {}),
+    ("pool", {"n_workers": 2, "min_shard": 1}),
+])
+def test_warm_run_measures_nothing_and_replays_exactly(
+        store_path, backend, kwargs, noise, monkeypatch):
+    """THE acceptance lock: second run in a fresh process = zero
+    ``_measure_batch`` calls, byte-identical (features, labels, times),
+    for every analytic backend, noisy and noiseless."""
+    g = spmv_dag_fine()
+    bk = dict(kwargs, noise_sigma=noise, noise_seed=7)
+
+    def run():
+        return S.run_search(g, S.MCTSSearch(g, 2, seed=5), budget=None,
+                            sim_budget=40, batch_size=8,
+                            backend=backend, backend_kwargs=dict(bk),
+                            store_path=store_path)
+
+    cold = run()
+    assert cold.cache_misses > 0 and cold.store_hits == 0
+
+    # "Fresh process": a brand-new evaluator whose only shared state is
+    # the store file; any measurement attempt is an instant failure.
+    def no_measuring(self, schedules, encoded=None):
+        raise AssertionError(
+            "warm run called _measure_batch — store missed")
+    monkeypatch.setattr(E.BACKENDS[backend], "_measure_batch",
+                        no_measuring)
+    warm = run()
+    assert warm.cache_misses == 0
+    assert warm.store_hits == cold.cache_misses
+    assert warm.cache_hits == cold.cache_hits
+    assert warm.times == cold.times
+    assert [s.items for s in warm.schedules] \
+        == [s.items for s in cold.schedules]
+    fa, la, ta = cold.dataset()
+    fb, lb, tb = warm.dataset()
+    assert ta.tobytes() == tb.tobytes()
+    assert fa.X.tobytes() == fb.X.tobytes()
+    assert fa.names() == fb.names()
+    assert np.array_equal(la.labels, lb.labels)
+
+
+def test_store_holds_noiseless_base_times(store_path):
+    """Noise stays parent-side: a noisy search writes *base* times, so
+    a warm noiseless run sees the clean values and a warm noisy run
+    redraws the identical (canonical key, draw index) jitter."""
+    g = C.spmv_dag()
+    scheds = list(C.enumerate_schedules(g, 2))[:12]
+    with E.make_evaluator(g, "sim", store_path=store_path,
+                          noise_sigma=0.05, noise_seed=9) as ev:
+        noisy_cold = ev.evaluate(scheds)
+    clean = E.make_evaluator(g, "sim").evaluate(scheds)
+    with E.make_evaluator(g, "sim", store_path=store_path) as ev2:
+        assert ev2.evaluate(scheds) == clean     # base times stored
+        assert ev2.cache_misses == 0
+    with E.make_evaluator(g, "sim", store_path=store_path,
+                          noise_sigma=0.05, noise_seed=9) as ev3:
+        assert ev3.evaluate(scheds) == noisy_cold
+        assert ev3.cache_misses == 0
+
+
+def test_store_cross_backend_warm_start(store_path):
+    """The analytic family shares one fingerprint: a store warmed by
+    the vectorized backend serves sim and pool."""
+    g = spmv_dag_fine()
+    scheds = list(C.enumerate_schedules(g, 2))[:30]
+    with E.make_evaluator(g, "vectorized",
+                          store_path=store_path) as ev:
+        base = ev.evaluate(scheds)
+    for backend, kwargs in (("sim", {}),
+                            ("pool", {"n_workers": 2, "min_shard": 1})):
+        with E.make_evaluator(g, backend, store_path=store_path,
+                              **kwargs) as ev2:
+            assert ev2.evaluate(scheds) == base
+            assert (ev2.store_hits, ev2.cache_misses) == (30, 0)
+
+
+def test_wallclock_store_seam(store_path):
+    """Wallclock measurements persist too: a fresh evaluator replays
+    them as store hits without re-measuring (times are memoized real
+    measurements, so the values match exactly)."""
+    g = C.spmv_dag(rows_per_rank=32, nnz_per_rank=128)
+    impls, env = E.demo_spmv_impls(g, n=8)
+    scheds = list(C.enumerate_schedules(g, 2))[:4]
+    with E.make_evaluator(g, "wallclock", impls=impls, env=env,
+                          repeats=2, store_path=store_path) as ev:
+        cold = ev.evaluate(scheds)
+        assert ev.cache_misses == 4
+    with E.make_evaluator(g, "wallclock", impls=impls, env=env,
+                          repeats=2, store_path=store_path) as ev2:
+        assert ev2.evaluate(scheds) == cold
+        assert (ev2.store_hits, ev2.cache_misses) == (4, 0)
+        assert ev2.n_checked == 0           # nothing re-run
+
+
+def test_shared_store_object_not_closed_by_evaluator(store_path):
+    g = C.spmv_dag()
+    scheds = list(C.enumerate_schedules(g, 2))[:5]
+    store = EvalStore(store_path)
+    with E.make_evaluator(g, "sim", store=store) as ev:
+        ev.evaluate(scheds)
+    # The evaluator owned nothing: the caller's store is still open.
+    store.put(_fp(), b"still-open", 1.0)
+    store.close()
+
+
+def test_store_and_store_path_mutually_exclusive(store_path):
+    g = C.spmv_dag()
+    with EvalStore(store_path) as store:
+        with pytest.raises(ValueError, match="not both"):
+            E.make_evaluator(g, "sim", store=store,
+                             store_path=store_path)
+        with pytest.raises(ValueError, match="preconfigured"):
+            S.run_search(g, S.MCTSSearch(g, 2, seed=0), budget=4,
+                         evaluator=E.make_evaluator(g, "sim"),
+                         store=store)
+
+
+def test_salvaged_measurements_reach_the_store(store_path):
+    """A wallclock batch aborted by the value gate still persists its
+    completed (paid) measurements — a fresh process replays them."""
+    import jax.numpy as jnp
+    g = C.spmv_dag(rows_per_rank=32, nnz_per_rank=128)
+    impls, env = E.demo_spmv_impls(g, n=8)
+    bad = dict(impls)
+    bad["yR"] = C.op_impl(lambda x, y: x + y, ["xR", "yL"], ["yR"])
+    env = dict(env)
+    env["yL"] = jnp.zeros((8,), jnp.float32)
+    scheds = list(C.enumerate_schedules(g, 2))
+    ref = E.reference_schedule(g)
+
+    def yl_first(s):
+        order = s.order()
+        return order.index("yL") < order.index("yR")
+
+    good = next(s for s in scheds if yl_first(s) == yl_first(ref))
+    target = next(s for s in scheds if yl_first(s) != yl_first(ref))
+    with E.make_evaluator(g, "wallclock", impls=bad, env=env, repeats=1,
+                          store_path=store_path) as ev:
+        with pytest.raises(AssertionError):
+            ev.evaluate([good, target])
+    with E.make_evaluator(g, "wallclock", impls=bad, env=env, repeats=1,
+                          store_path=store_path) as ev2:
+        t = ev2.evaluate_one(good)
+        assert t > 0.0
+        assert (ev2.store_hits, ev2.cache_misses) == (1, 0)

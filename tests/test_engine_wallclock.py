@@ -61,11 +61,19 @@ def test_wallclock_value_gate_catches_divergence(small_spmv):
     with pytest.raises(AssertionError, match="yR"):
         ev.evaluate([good, target])
     # The measurement completed before the failure is salvaged: the
-    # good schedule is cached and a retry doesn't recompile it.
+    # good schedule is cached and a retry doesn't recompile it. The
+    # aborted batch counted nothing, so nothing has hit a meter yet.
     assert len(ev) == 1
+    assert (ev.cache_hits, ev.cache_misses) == (0, 0)
     t = ev.evaluate_one(good)
     assert t > 0.0
-    assert ev.cache_hits == 1
+    # Budget-accounting regression (the salvage-miscount bug): that
+    # measurement was *paid* — its first post-salvage lookup must be a
+    # miss, not a free cache hit that undercounts sim_budget.
+    assert (ev.cache_hits, ev.cache_misses) == (0, 1)
+    # Only the first lookup: afterwards it is an ordinary memo hit.
+    assert ev.evaluate_one(good) == t
+    assert (ev.cache_hits, ev.cache_misses) == (1, 1)
 
 
 def test_wallclock_end_to_end_search(small_spmv):

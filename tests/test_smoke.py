@@ -1,7 +1,7 @@
 """End-to-end smoke gate (select with ``pytest -m smoke``)."""
 import pytest
 
-from benchmarks.smoke import run_backend_smoke, run_smoke
+from benchmarks.smoke import run_backend_smoke, run_smoke, run_store_smoke
 
 
 @pytest.mark.smoke
@@ -26,3 +26,14 @@ def test_smoke_every_evaluation_backend():
         assert out[backend]["n_schedules"] >= 1
         assert out[backend]["best_us"] > 0.0
     assert out["pool"]["cache_misses"] == out["sim"]["cache_misses"]
+
+
+@pytest.mark.smoke
+def test_smoke_store_warm_start(tmp_path):
+    """Cold search warms the store; a fresh evaluator replays it from
+    disk with zero measurements (the CI warm-start gate, minus the
+    workflow cache)."""
+    out = run_store_smoke(str(tmp_path / "smoke.evalstore"))
+    assert not out["warm_cache_restored"]        # tmp file starts cold
+    assert out["second"]["store_hits"] > 0
+    assert out["second"]["misses"] == 0
