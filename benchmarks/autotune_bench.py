@@ -1,0 +1,94 @@
+"""Kernel-autotune rows (``autotune_*``): what the DesignSpace stack
+buys when the candidates are the repo's own Pallas kernel parameters.
+
+Two pairs of rows over the same ``spmv_mulsum`` block-size grid
+(interpret mode, so the numbers are CPU-portable and CI-safe; a real
+TPU tuning run uses the same code with ``interpret=None``):
+
+* ``autotune_store_{cold,warm}`` — the persistent-store warm start for
+  kernel sweeps: a fresh :class:`repro.engine.params.
+  KernelWallclockEvaluator` against an empty store file (cold: every
+  candidate compiled, gated, and timed, then written through) vs
+  against the warmed file (warm: every candidate replayed from disk,
+  zero kernel executions). The derived column reports the speedup and
+  the replay-identity verdict — warm times must equal the memoized
+  cold measurements exactly.
+* ``autotune_compile_{batch,per_candidate}`` — what batch-ahead
+  compilation amortizes: ``compile_mode="batch"`` compiles + gates the
+  whole miss batch before any timing, ``"per_candidate"`` interleaves
+  compile/gate/time per candidate. Both measure the same quantity
+  (identical store fingerprint), so the row pair is pure
+  compile-scheduling overhead.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import repro.engine as E
+
+REPS = 3
+
+
+def _grid():
+    # Fresh space per use: closures (and their jit caches) are not
+    # shared across reps, so every timed pass pays its own compiles.
+    from repro.kernels.autotune import spmv_mulsum_space
+    return spmv_mulsum_space(n=256, k=8, block_values=(32, 64, 128),
+                             interpret=True)
+
+
+def autotune_benches() -> list[str]:
+    rows = []
+    n = _grid().n_candidates()
+    label = f"spmv_mulsum_{n}"
+
+    # Cold vs store-warmed sweep (best-of-REPS, fresh store per rep).
+    best_cold = best_warm = float("inf")
+    cold_out = warm_out = None
+    with tempfile.TemporaryDirectory() as tmp:
+        for rep in range(REPS):
+            path = os.path.join(tmp, f"autotune.{rep}.evalstore")
+            sp = _grid()
+            cands = list(sp.enumerate_candidates())
+            with E.make_evaluator(sp, "wallclock", repeats=1,
+                                  store_path=path) as ev:
+                t0 = time.perf_counter()
+                cold_out = ev.evaluate(cands)
+                best_cold = min(best_cold, time.perf_counter() - t0)
+                assert ev.cache_misses == n
+            with E.make_evaluator(_grid(), "wallclock", repeats=1,
+                                  store_path=path) as ev:
+                t0 = time.perf_counter()
+                warm_out = ev.evaluate(cands)
+                best_warm = min(best_warm, time.perf_counter() - t0)
+                assert (ev.store_hits, ev.cache_misses) == (n, 0)
+        size_kb = os.path.getsize(path) / 1024
+    ident = "identical" if warm_out == cold_out else "MISMATCH"
+    rows.append(f"autotune_store_cold_{label},"
+                f"{best_cold / n * 1e6:.2f},store_{size_kb:.1f}KiB")
+    rows.append(f"autotune_store_warm_{label},"
+                f"{best_warm / n * 1e6:.2f},"
+                f"{best_cold / best_warm:.2f}x_vs_cold_{ident}")
+
+    # Batch-ahead vs per-candidate compilation over the same grid.
+    best = {"batch": float("inf"), "per_candidate": float("inf")}
+    for _ in range(REPS):
+        for mode in ("batch", "per_candidate"):
+            sp = _grid()
+            cands = list(sp.enumerate_candidates())
+            with E.make_evaluator(sp, "wallclock", repeats=1,
+                                  compile_mode=mode) as ev:
+                t0 = time.perf_counter()
+                ev.evaluate(cands)
+                best[mode] = min(best[mode],
+                                 time.perf_counter() - t0)
+                assert ev.n_checked == n
+    rows.append(f"autotune_compile_batch_{label},"
+                f"{best['batch'] / n * 1e6:.2f},{n}_candidates")
+    rows.append(f"autotune_compile_per_candidate_{label},"
+                f"{best['per_candidate'] / n * 1e6:.2f},"
+                f"{best['per_candidate'] / best['batch']:.2f}"
+                f"x_vs_batch")
+    return rows

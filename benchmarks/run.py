@@ -21,6 +21,7 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.at_scale import at_scale_benches
+from benchmarks.autotune_bench import autotune_benches
 from benchmarks.driver_bench import driver_benches
 from benchmarks.engine_bench import engine_benches
 from benchmarks.featurize_bench import featurize_benches
@@ -35,8 +36,9 @@ from benchmarks.trees_bench import trees_benches
 BENCH_FNS = (fig1_spread, fig4_labels, fig5_tree, table5_accuracy,
              tables678_rules, stepdag_overlap, granularity_ablation,
              noise_robustness, featurize_benches, trees_benches,
-             engine_benches, driver_benches, at_scale_benches,
-             search_eval_benches, kernel_benches, model_benches)
+             engine_benches, autotune_benches, driver_benches,
+             at_scale_benches, search_eval_benches, kernel_benches,
+             model_benches)
 
 
 def parse_row(row: str) -> dict:

@@ -12,6 +12,11 @@ small MCTS budget. Used two ways:
 *every* registered evaluation backend (pool with 2 workers, wallclock
 on the tiny CPU demo impls), so the smoke gate keeps all engine
 backends honest, not just the default serial one.
+:func:`run_autotune_smoke` does the same for the kernel `ParamSpace`
+path — a 2-point block-size sweep through the param-space wallclock
+evaluator — and :func:`run_store_smoke` / the ``store_path`` form of
+the autotune smoke are the CI warm-start gates for the schedule-space
+and kernel-space store fingerprints respectively.
 """
 from __future__ import annotations
 
@@ -137,12 +142,63 @@ def run_store_smoke(store_path: str, budget: int = 120,
     }
 
 
+def run_autotune_smoke(store_path: str | None = None) -> dict:
+    """Tiny kernel-space autotune pass: a 2-point ``spmv_mulsum``
+    block-size sweep through the param-space ``wallclock`` backend on
+    CPU (interpret-mode kernel, value-correctness gate on).
+
+    With ``store_path``, runs the sweep twice and asserts the second
+    pass — always a fresh evaluator — replays entirely from disk
+    (``store_hits == n_candidates``, zero measurements, identical
+    times), mirroring :func:`run_store_smoke` for the kernel
+    `ParamSpace` fingerprints so the CI warm-start gate covers them
+    too.
+    """
+    from repro.kernels.autotune import spmv_mulsum_space
+
+    def sweep():
+        sp = spmv_mulsum_space(n=128, k=4, block_values=(32, 64),
+                               interpret=True)
+        t0 = time.perf_counter()
+        res = S.run_search(sp, S.ExhaustiveSearch(sp), budget=None,
+                           backend="wallclock",
+                           backend_kwargs={"repeats": 1},
+                           store_path=store_path)
+        return sp, res, time.perf_counter() - t0
+
+    sp, first, wall = sweep()
+    assert len(first.schedules) == sp.n_candidates() == 2
+    best, best_t = first.best()
+    out = {
+        "n_candidates": len(first.schedules),
+        "best": sp.describe(best),
+        "best_us": best_t * 1e6,
+        "first": {"misses": first.cache_misses,
+                  "store_hits": first.store_hits},
+        "wall_s": wall,
+    }
+    if store_path is not None:
+        _, second, _ = sweep()
+        assert second.cache_misses == 0, \
+            f"warm kernel sweep still measured {second.cache_misses}"
+        assert second.store_hits == len(first.schedules), \
+            "warm kernel sweep was not served entirely by the store"
+        assert second.times == first.times, \
+            "warm kernel replay diverged from the previous sweep"
+        out["second"] = {"misses": second.cache_misses,
+                         "store_hits": second.store_hits}
+        out["warm_cache_restored"] = first.cache_misses == 0
+    return out
+
+
 def main() -> None:
     out = run_smoke()
     for k, v in out.items():
         print(f"smoke_{k}: {v}")
     for backend, v in run_backend_smoke().items():
         print(f"smoke_backend_{backend}: {v}")
+    for k, v in run_autotune_smoke().items():
+        print(f"smoke_autotune_{k}: {v}")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,7 @@ import numpy as np
 
 import repro.core as C
 from repro.core.dag import halo3d_dag
+from repro.search import MCTSSearch, run_search
 
 
 def main() -> None:
@@ -23,9 +24,8 @@ def main() -> None:
     print(f"3-D halo DAG: {graph.n_vertices()} vertices "
           f"({len(graph.gpu_ops())} GPU ops, 6 faces + Inner)")
 
-    mcts = C.MCTS(graph, args.streams,
-                  lambda s: C.makespan(graph, s), seed=0)
-    res = mcts.run(args.iters)
+    res = run_search(graph, MCTSSearch(graph, args.streams, seed=0),
+                     budget=args.iters, batch_size=1)
     times = np.array(res.times)
     best = res.schedules[int(np.argmin(times))]
     print(f"explored {len(res.schedules)} schedules; "

@@ -9,6 +9,7 @@ import argparse
 import numpy as np
 
 import repro.core as C
+from repro.search import MCTSSearch, run_search
 
 
 def main() -> None:
@@ -20,10 +21,9 @@ def main() -> None:
     graph = C.spmv_dag()
 
     # 2. Explore the (ordering x stream assignment) space with MCTS,
-    #    scored by the TPU machine model.
-    mcts = C.MCTS(graph, n_streams=2,
-                  objective=lambda s: C.makespan(graph, s), seed=0)
-    result = mcts.run(args.iters)
+    #    scored by the TPU machine model (the "sim" backend).
+    result = run_search(graph, MCTSSearch(graph, 2, seed=0),
+                        budget=args.iters, batch_size=1)
     times = np.array(result.times)
     print(f"explored {len(result.schedules)} implementations; "
           f"spread {times.max() / times.min():.2f}x "

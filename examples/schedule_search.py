@@ -10,9 +10,18 @@ the decision tree then emits human-readable rules like "rs0 before
 bwd2" or "rs1 different stream than bwd1" — exactly the paper's
 output, for a 2026 workload.
 
+With ``--space`` the same pipeline runs over any *registered* design
+space instead of the train-step DAG: the paper's schedule spaces
+(``spmv``, ``spmv_fine``, ``halo3d``) or the repo's own Pallas kernel
+parameter grids (``flash_attention``, ``spmv_mulsum``, ``pack`` —
+autotuned through the wall-clock runner, emitting block-size design
+rules; ``demo`` is an analytic grid needing no JAX).
+
 Usage: PYTHONPATH=src python examples/schedule_search.py
            [--arch qwen2.5-32b] [--layers 4] [--iters 600]
-           [--strategy portfolio|mcts] [--backend sim|vectorized|pool]
+           [--space spmv|halo3d|flash_attention|...]
+           [--strategy portfolio|mcts]
+           [--backend sim|vectorized|pool|wallclock]
            [--surrogate ridge|boost]
            [--acquisition argmin_topk|ucb|expected_improvement]
            [--rules [PATH]] [--store PATH]
@@ -26,6 +35,7 @@ from repro.driver import ACQUISITIONS
 from repro.core.stepdag import StepCosts, train_step_dag, \
     with_comm_durations
 from repro.launch.costs import HBM_BW, LINK_BW, PEAK_FLOPS
+from repro.space import SPACES, ParamSpace, make_space
 
 
 def costs_from_arch(arch: str, layers: int, tokens_per_chip: int,
@@ -49,17 +59,26 @@ def main() -> None:
                     help="coarse pipeline stages in the DAG")
     ap.add_argument("--iters", type=int, default=600)
     ap.add_argument("--channels", type=int, default=2)
+    ap.add_argument("--space", choices=tuple(sorted(SPACES)),
+                    default=None,
+                    help="search a registered design space "
+                         "(repro.space registry) instead of the "
+                         "train-step DAG; kernel grids default to the "
+                         "wall-clock runner")
     ap.add_argument("--strategy", choices=("portfolio", "mcts"),
                     default="portfolio",
                     help="portfolio = greedy seeding + MCTS refinement "
-                         "+ surrogate-screened exploitation")
-    ap.add_argument("--backend", choices=("sim", "vectorized", "pool"),
-                    default="sim",
+                         "+ surrogate-screened exploitation "
+                         "(graph spaces only; kernel grids always "
+                         "use mcts)")
+    ap.add_argument("--backend",
+                    choices=("sim", "vectorized", "pool", "wallclock"),
+                    default=None,
                     help="evaluation engine (repro.engine registry); "
                          "all analytic backends are bit-identical — "
-                         "this is a pure throughput choice (wallclock "
-                         "additionally needs op impls; see "
-                         "src/repro/engine/README.md)")
+                         "a pure throughput choice. Default: sim for "
+                         "analytic spaces, wallclock for kernel "
+                         "grids (see src/repro/engine/README.md)")
     ap.add_argument("--batch-size", type=int, default=None,
                     help="schedules per propose() call; default 1 for "
                          "the sim backend (the paper's strictly "
@@ -91,23 +110,40 @@ def main() -> None:
                          "(repro.rules.distill) to PATH, or to stdout "
                          "when given without a value")
     args = ap.parse_args()
+
+    if args.space is not None:
+        try:
+            target = make_space(args.space, n_streams=args.channels)
+        except TypeError:  # parameter grids take no n_streams
+            target = make_space(args.space)
+        graph = getattr(target, "graph", None)
+        kind = "parameter grid" if isinstance(target, ParamSpace) \
+            else "schedule space"
+        print(f"design space {target.name!r} ({kind})")
+    else:
+        costs = costs_from_arch(args.arch, args.layers,
+                                tokens_per_chip=16 * 4096 // 16)
+        graph = with_comm_durations(train_step_dag(args.layers, costs),
+                                    LINK_BW)
+        target = graph
+        print(f"train-step DAG for {args.arch}: "
+              f"{graph.n_vertices()} ops, {args.layers} stages")
+
+    kernel_grid = isinstance(target, ParamSpace) \
+        and target.runner is not None
+    if args.backend is None:
+        args.backend = "wallclock" if kernel_grid else "sim"
     if args.batch_size is None:
         args.batch_size = 1 if args.backend == "sim" else 32
 
-    costs = costs_from_arch(args.arch, args.layers,
-                            tokens_per_chip=16 * 4096 // 16)
-    graph = with_comm_durations(train_step_dag(args.layers, costs),
-                                LINK_BW)
-    print(f"train-step DAG for {args.arch}: {graph.n_vertices()} ops, "
-          f"{args.layers} stages")
-
-    if args.strategy == "portfolio":
+    if args.strategy == "portfolio" and graph is not None:
         strategy = S.PortfolioSearch(graph, args.channels, seed=0,
                                      surrogate=args.surrogate,
                                      acquisition=args.acquisition)
-    else:
-        strategy = S.MCTSSearch(graph, args.channels, seed=0)
-    res = S.run_search(graph, strategy, budget=args.iters,
+    else:  # graph-less spaces: the space-generic MCTS
+        strategy = S.MCTSSearch(target, seed=0) if graph is None \
+            else S.MCTSSearch(graph, args.channels, seed=0)
+    res = S.run_search(target, strategy, budget=args.iters,
                        backend=args.backend, batch_size=args.batch_size,
                        store_path=args.store)
     times = res.times_array()
@@ -120,14 +156,17 @@ def main() -> None:
     if args.store is not None:
         print(f"evaluation store {args.store}: {res.store_hits} warm "
               f"hits, {res.cache_misses} new measurements appended")
-    if args.strategy == "portfolio":
+    if args.strategy == "portfolio" and graph is not None:
         q = strategy.screening_quality()
         print(f"surrogate screened {q['n_screened']} candidates "
               f"({q['n_compared']} simulated; rank corr "
               f"{q['spearman']:.2f})")
-    print("best emission order:",
-          " ".join(str(i) for i in best.items
-                   if i.name not in ("start", "end")))
+    if graph is None:
+        print(f"best parameters: {target.describe(best)}")
+    else:
+        print("best emission order:",
+              " ".join(str(i) for i in best.items
+                       if i.name not in ("start", "end")))
 
     report = R.distill(res)
     print(f"\n{report.labeling.n_classes} performance classes; "
@@ -139,11 +178,13 @@ def main() -> None:
         path = report.write(args.rules)
         print(f"\nfull design-rule report written to {path}")
 
-    # Roofline context for the fastest schedule.
-    total_flops = sum(op.flops for op in graph.ops.values())
-    print(f"\ncompute-only bound {total_flops / PEAK_FLOPS * 1e3:.2f} ms;"
-          f" best overlap schedule {times.min() * 1e3:.2f} ms "
-          f"({total_flops / PEAK_FLOPS / times.min():.0%} of peak)")
+    # Roofline context for the fastest train-step schedule.
+    if args.space is None:
+        total_flops = sum(op.flops for op in graph.ops.values())
+        print(f"\ncompute-only bound "
+              f"{total_flops / PEAK_FLOPS * 1e3:.2f} ms;"
+              f" best overlap schedule {times.min() * 1e3:.2f} ms "
+              f"({total_flops / PEAK_FLOPS / times.min():.0%} of peak)")
 
 
 if __name__ == "__main__":

@@ -3,21 +3,20 @@ design rules for asynchronous compute/communication programs.
 
 Pipeline (paper Fig. 2):
 
-    Graph (dag.py)  ->  MCTS (mcts.py) / exhaustive (enumerate.py)
+    Graph (dag.py)  ->  MCTS (repro.search.mcts) / exhaustive (enumerate.py)
         -> measured times (costmodel.py analytic | executor.py wall-clock)
-        -> class labels (repro.rules.labels, shim: labels.py)
+        -> class labels (repro.rules.labels)
         -> feature vectors (features.py)
-        -> decision tree (repro.rules.trees, shim: dtree.py)
-        -> design rules (repro.rules.rulesets, shim: rules.py)
+        -> decision tree (repro.rules.trees)
+        -> design rules (repro.rules.rulesets)
 
 The labels -> tree -> rules stack lives in :mod:`repro.rules` (one
-call: :func:`repro.rules.distill`); this package re-exports it through
-shims for compatibility. The shim *modules* (labels.py, dtree.py,
-rules.py, mcts.py) emit :class:`DeprecationWarning` on import, so this
-``__init__`` re-exports the moved names straight from their new homes
-— ``import repro.core`` stays warning-free; only touching the old
-module paths (or the legacy ``MCTS`` wrapper, loaded lazily below)
-warns.
+call: :func:`repro.rules.distill`); this package re-exports the moved
+names straight from their new homes so historical ``repro.core``
+one-stop imports keep working. Search strategies live in
+:mod:`repro.search` and design spaces in :mod:`repro.space`; the
+pre-subsystem shim modules (``core/{mcts,dtree,labels,rules}.py``,
+``search/evaluator.py``) are gone.
 """
 from repro.core.dag import (BoundOp, CommRole, Graph, Op, OpKind, Schedule,
                             canonicalize_streams, spmv_dag,
@@ -36,23 +35,12 @@ from repro.rules.rulesets import (Rule, RuleSet, annotate_vs_canonical,
 from repro.core.executor import build_runner, jit_runner, op_impl
 from repro.core.stepdag import StepCosts, train_step_dag, with_comm_durations
 
-
-def __getattr__(name: str):
-    # The legacy MCTS wrapper lives in the deprecated repro.core.mcts
-    # module; loading it eagerly would make every ``import repro.core``
-    # warn. Resolved on first attribute access instead.
-    if name in ("MCTS", "MCTSResult"):
-        import repro.core.mcts as _mcts
-        return getattr(_mcts, name)
-    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
-
 __all__ = [
     "BoundOp", "CommRole", "Graph", "Op", "OpKind", "Schedule",
     "canonicalize_streams", "spmv_dag", "validate_schedule",
     "ExpandedItem", "expand", "expanded_names",
     "count_schedules", "enumerate_schedules",
     "Machine", "SimResult", "makespan", "simulate",
-    "MCTS", "MCTSResult",
     "Labeling", "label_times",
     "DegenerateFeatureSpaceError", "Feature", "FeatureBasis",
     "FeatureMatrix", "apply_features", "featurize", "featurize_like",

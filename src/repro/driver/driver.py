@@ -55,6 +55,7 @@ from repro.engine import make_evaluator
 from repro.engine.base import EvaluatorBase
 from repro.search.pipeline import SearchResult
 from repro.search.strategy import PoolSearchStrategy, SearchStrategy
+from repro.space.base import DesignSpace, as_space
 
 
 class SearchDriver:
@@ -77,7 +78,8 @@ class SearchDriver:
     cost.
     """
 
-    def __init__(self, graph: Graph, strategy: SearchStrategy,
+    def __init__(self, graph: "Graph | DesignSpace",
+                 strategy: SearchStrategy,
                  machine: Machine | None = None,
                  budget: int | None = 2000,
                  batch_size: int = 1,
@@ -116,6 +118,7 @@ class SearchDriver:
                     store is not None or store_path is not None):
                 raise ValueError(
                     f"{k} passed both directly and in backend_kwargs")
+        self.space = as_space(graph)
         self.graph = graph
         self.strategy = strategy
         self.machine = machine
@@ -131,7 +134,7 @@ class SearchDriver:
         self.acquisition = None if acquisition is None else \
             resolve_acquisition(acquisition, acquisition_kwargs)
         self.sinks: list[Sink] = [
-            make_sink(s, graph) if isinstance(s, str) else s
+            make_sink(s, self.space) if isinstance(s, str) else s
             for s in sinks]
         self._ran = False
 
@@ -225,8 +228,10 @@ class SearchDriver:
             if owns_evaluator:
                 ev.close()
 
-        return SearchResult(graph=self.graph, schedules=schedules,
+        return SearchResult(graph=getattr(self.space, "graph", None),
+                            schedules=schedules,
                             times=times, n_proposed=n_proposed,
                             cache_hits=ev.cache_hits - hits0,
                             cache_misses=ev.cache_misses - misses0,
-                            store_hits=ev.store_hits - store0)
+                            store_hits=ev.store_hits - store0,
+                            space=self.space)

@@ -43,9 +43,10 @@ from typing import Callable, Protocol, runtime_checkable
 import numpy as np
 
 from repro.core.dag import Graph, Schedule
-from repro.core.features import (DegenerateFeatureSpaceError, FeatureBasis,
+from repro.core.features import (DegenerateFeatureSpaceError,
                                  FeatureMatrix)
 from repro.engine.base import EvalBatch
+from repro.space.base import DesignSpace, as_space
 
 
 @runtime_checkable
@@ -125,9 +126,11 @@ class DatasetSink:
     while featurizing each schedule exactly once, the round it arrives.
     """
 
-    def __init__(self, graph: Graph, half_bins: int = 128):
-        self.graph = graph
-        self.basis = FeatureBasis(graph)
+    def __init__(self, graph: "Graph | DesignSpace",
+                 half_bins: int = 128):
+        self.space = as_space(graph)
+        self.graph = getattr(self.space, "graph", None)
+        self.basis = self.space.feature_basis()
         self.schedules: list[Schedule] = []
         self.times: list[float] = []
         self.histogram = StreamingHistogram(half_bins=half_bins)
@@ -199,7 +202,7 @@ class TraceSink:
     streams.
     """
 
-    def __init__(self, graph: Graph | None = None):
+    def __init__(self, graph: "Graph | DesignSpace | None" = None):
         self.rounds: list[dict] = []
         self._best = float("inf")
 
@@ -232,7 +235,8 @@ register_sink("dataset", DatasetSink)
 register_sink("trace", TraceSink)
 
 
-def make_sink(sink: str, graph: Graph, **kwargs) -> Sink:
+def make_sink(sink: str, graph: "Graph | DesignSpace",
+              **kwargs) -> Sink:
     """Construct a sink by registry name."""
     try:
         factory = SINKS[sink]

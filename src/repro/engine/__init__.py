@@ -20,8 +20,15 @@ Backends (see README.md in this package for the full matrix):
                   evaluates a whole miss batch with array ops.
   ``pool``        ``sim``'s math sharded over a process pool; cache and
                   accounting stay in the parent, results byte-identical.
-  ``wallclock``   the jitted token-chain executor (median-of-k real
-                  measurements + value-correctness gate).
+  ``wallclock``   real measurements (median-of-k + value-correctness
+                  gate): the jitted token-chain executor for schedule
+                  spaces, the kernel-runner sweep for parameter spaces
+                  (:func:`make_evaluator` dispatches on the space).
+
+Every backend accepts a :class:`~repro.core.dag.Graph` (wrapped into
+the paper's schedule space) or any
+:class:`~repro.space.base.DesignSpace` as its first argument; the
+analytic backends need a space with an analytic cost model.
 """
 from __future__ import annotations
 
@@ -29,12 +36,15 @@ from repro.core.costmodel import Machine
 from repro.core.dag import Graph
 from repro.engine.base import (BatchEvaluator, EvalBatch, EvaluatorBase,
                                canonical_key)
+from repro.engine.params import KernelWallclockEvaluator
 from repro.engine.pool import PoolEvaluator
 from repro.engine.store import EvalStore, store_fingerprint
 from repro.engine.vectorized import (GraphTables, VectorizedEvaluator,
                                      simulate_batch, simulate_encoded)
-from repro.engine.wallclock import (ExecutorEvaluator, demo_spmv_impls,
-                                    reference_schedule)
+from repro.engine.wallclock import (ExecutorEvaluator,
+                                    assert_outputs_close,
+                                    demo_spmv_impls, reference_schedule)
+from repro.space.params import ParamSpace
 
 BACKENDS: dict[str, type[EvaluatorBase]] = {
     "sim": BatchEvaluator,
@@ -69,6 +79,11 @@ def make_evaluator(graph: Graph, backend: str = "sim", *,
         raise ValueError(
             f"unknown evaluation backend {backend!r}; available: "
             f"{sorted(BACKENDS)}") from None
+    if backend == "wallclock" and isinstance(graph, ParamSpace):
+        # Parameter spaces measure through their KernelRunner, not the
+        # schedule executor; same registry name, same search-visible
+        # contract.
+        cls = KernelWallclockEvaluator
     return cls(graph, machine=machine, **kwargs)
 
 
@@ -79,6 +94,7 @@ __all__ = [
     "simulate_encoded",
     "PoolEvaluator",
     "EvalStore", "store_fingerprint",
-    "ExecutorEvaluator", "demo_spmv_impls", "reference_schedule",
+    "ExecutorEvaluator", "KernelWallclockEvaluator",
+    "assert_outputs_close", "demo_spmv_impls", "reference_schedule",
     "Machine",
 ]

@@ -44,35 +44,11 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
-from repro.core.costmodel import Machine, op_durations, simulate
+from repro.core.costmodel import Machine
 from repro.core.dag import Graph, Schedule
-from repro.engine.store import EvalStore, store_fingerprint
-
-
-def canonical_key(schedule: Schedule) -> tuple:
-    """Hashable identity under stream relabeling (transposition key).
-
-    Inlines :func:`~repro.core.dag.canonicalize_streams`' first-use
-    relabeling without building intermediate ``BoundOp`` objects. The
-    evaluator hot path does NOT go through here — it derives the same
-    identity for a whole batch at once in
-    :meth:`EvaluatorBase._encode_batch` (whose relabel must stay
-    equivalent to this one; the bijection-awareness tests lock both).
-    This function is the per-schedule form for everyone else: surrogate
-    pool dedup, benchmarks, tests.
-    """
-    mapping: dict[int, int] = {}
-    out = []
-    for it in schedule.items:
-        s = it.stream
-        if s is None:
-            out.append((it.name, None))
-        else:
-            c = mapping.get(s)
-            if c is None:
-                c = mapping[s] = len(mapping)
-            out.append((it.name, c))
-    return tuple(out)
+from repro.engine.store import EvalStore
+from repro.space.base import DesignSpace, as_space
+from repro.space.schedule import canonical_key  # noqa: F401  (re-export)
 
 
 def _noise_gauss(noise_seed: int, key: bytes, draw: int) -> float:
@@ -119,7 +95,8 @@ class EvaluatorBase:
 
     backend = "abstract"
 
-    def __init__(self, graph: Graph, machine: Machine | None = None,
+    def __init__(self, graph: "Graph | DesignSpace",
+                 machine: Machine | None = None,
                  noise_sigma: float = 0.0, noise_seed: int = 0,
                  store: EvalStore | None = None,
                  store_path: "str | None" = None,
@@ -128,13 +105,14 @@ class EvaluatorBase:
             raise ValueError(
                 "pass store= (a shared EvalStore) or store_path= "
                 "(a file the evaluator opens and owns), not both")
-        self.graph = graph
+        self.space = as_space(graph)
+        # Schedule spaces expose their graph; param spaces have none.
+        self.graph = getattr(self.space, "graph", None)
         self.machine = machine or Machine()
         self.noise_sigma = noise_sigma
         self.noise_seed = noise_seed
         self._noise_draws: dict[bytes, int] = {}
-        self._durations = op_durations(graph, self.machine)
-        self._op_id = {n: i for i, n in enumerate(graph.ops)}
+        self._durations = self.space.durations(self.machine)
         self._cache: dict[bytes, float] = {}
         self._salvaged: set[bytes] = set()
         self.cache_hits = 0
@@ -164,14 +142,16 @@ class EvaluatorBase:
     @property
     def store_fingerprint(self) -> bytes:
         """Content address of this evaluator's measurement semantics
-        (see :func:`repro.engine.store.store_fingerprint`); lazy so
-        subclass ``__init__`` can finish configuring the objective."""
+        (the space's :meth:`~repro.space.base.DesignSpace.fingerprint`
+        over the resolved objective; schedule spaces delegate to
+        :func:`repro.engine.store.store_fingerprint` unchanged); lazy
+        so subclass ``__init__`` can finish configuring the objective."""
         if self._fingerprint is None:
             objective = self._objective_key()
             if self.store_tag:
                 objective += f":{self.store_tag}"
-            self._fingerprint = store_fingerprint(
-                self.graph, self.machine, self._durations, objective)
+            self._fingerprint = self.space.fingerprint(
+                self.machine, self._durations, objective)
         return self._fingerprint
 
     def fresh_evals(self) -> int:
@@ -202,74 +182,23 @@ class EvaluatorBase:
 
         Called with distinct implementations only, in first-appearance
         order; must return one float per input, in order. ``encoded``
-        is the matching ``(K, 2, N)`` int32 canonical encoding rows
-        from :meth:`_encode_batch` — backends that simulate in array
-        form use it to skip re-encoding; others ignore it.
+        is the matching canonical encoding rows from
+        :meth:`_encode_batch` (``(K, 2, N)`` int32 for schedule
+        spaces, ``(K, D)`` value indices for parameter spaces) —
+        backends that simulate in array form use it to skip
+        re-encoding; others ignore it.
         """
         raise NotImplementedError
 
     # -- canonical encoding -------------------------------------------------
     def _encode_batch(self, schedules: Sequence[Schedule]
                       ) -> tuple[list[bytes], np.ndarray]:
-        """(keys, encoding) for a batch of complete schedules.
-
-        The encoding is ``(B, 2, N)`` int32: ``enc[b, 0]`` the op id
-        per position, ``enc[b, 1]`` the *canonical* (first-use-
-        relabeled, §III-C2) stream per position, -1 for CPU ops; each
-        row's bytes are the schedule's cache key — the same identity
-        :func:`canonical_key` computes, in a form the whole batch
-        shares with the array backends. The first-use relabel is itself
-        vectorized (first-occurrence position per stream,
-        stable-argsorted into ranks) over the *distinct* stream ids
-        present in the batch — never ``max(id) + 1`` slots — so sparse
-        ids (stream ``10**6``) cost what dense ids cost instead of
-        allocating gigabytes.
-        """
-        op_id = self._op_id
-        n = len(op_id)
-        b_n = len(schedules)
-        ids: list[int] = []
-        sts: list[int] = []
-        ext_i, ext_s = ids.extend, sts.extend
-        for sched in schedules:
-            items = sched.items
-            if len(items) != n:
-                raise ValueError(
-                    f"evaluators require complete schedules: got "
-                    f"{len(items)} items for a {n}-op graph")
-            ext_i([op_id[i.name] for i in items])
-            ext_s([-1 if i.stream is None else i.stream for i in items])
-        enc = np.empty((b_n, 2, n), dtype=np.int32)
-        enc[:, 0, :] = np.fromiter(ids, np.int32,
-                                   count=b_n * n).reshape(b_n, n)
-        enc[:, 1, :] = np.fromiter(sts, np.int32,
-                                   count=b_n * n).reshape(b_n, n)
-        streams = enc[:, 1, :]
-        uniq = np.unique(streams)
-        uniq = uniq[uniq >= 0]               # distinct real ids, sorted
-        if uniq.size:
-            d = uniq.size
-            pos = np.arange(n, dtype=np.int32)
-            first = np.where(
-                streams[:, :, None] == uniq[None, None, :],
-                pos[None, :, None], n).min(axis=1)      # (B, D)
-            # Ids absent from a row have first == n and stable-sort
-            # last, so present ids get ranks 0..p-1 in first-use order
-            # (same labels the dense 0..max relabel assigned) and the
-            # padding ranks are never looked up.
-            by_first = np.argsort(first, axis=1, kind="stable")
-            label = np.empty_like(by_first)
-            np.put_along_axis(
-                label, by_first,
-                np.arange(d)[None, :], axis=1)
-            col = np.searchsorted(
-                uniq, np.where(streams < 0, uniq[0], streams))
-            row_base = (np.arange(b_n) * d)[:, None]
-            enc[:, 1, :] = np.where(
-                streams >= 0,
-                label.ravel()[row_base + col],
-                -1)
-        return [row.tobytes() for row in enc], enc
+        """(cache keys, canonical encoding) for a candidate batch —
+        the space's :meth:`~repro.space.base.DesignSpace.encode_batch`
+        (for schedule spaces, the vectorized first-use stream relabel
+        that used to live here; see :meth:`repro.space.schedule.
+        ScheduleSpace.encode_batch`)."""
+        return self.space.encode_batch(schedules)
 
     # -- the shared evaluation path ----------------------------------------
     def _noisy(self, key: bytes, t: float) -> float:
@@ -399,13 +328,14 @@ class EvaluatorBase:
 
 
 class BatchEvaluator(EvaluatorBase):
-    """The serial reference backend: one discrete-event simulation per
-    canonical-unique schedule, under the analytic machine model."""
+    """The serial reference backend: one analytic-model evaluation per
+    canonical-unique candidate (a discrete-event simulation for
+    schedule spaces, the space's cost function otherwise)."""
 
     backend = "sim"
 
     def _measure_batch(self, schedules: Sequence[Schedule],
                        encoded: np.ndarray | None = None) -> list[float]:
-        return [simulate(self.graph, s, self.machine,
-                         durations=self._durations).makespan
+        return [self.space.analytic_cost(s, self.machine,
+                                         self._durations)
                 for s in schedules]

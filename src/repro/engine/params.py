@@ -1,0 +1,143 @@
+"""Param-space wall-clock backend: measure the repo's own kernels.
+
+The counterpart of :mod:`repro.engine.wallclock` for
+:class:`~repro.space.params.ParamSpace` candidates: instead of
+rendering a schedule into a token-chain runner, each candidate's
+parameter assignment is handed to the space's
+:class:`~repro.space.params.KernelRunner` (``build(params)`` → a
+zero-argument jitted callable on a fixed problem instance). Everything
+search-visible — memo cache, three-way hit/miss meters, persistent
+:class:`~repro.engine.store.EvalStore` warm starts, noise seeding,
+salvage — is inherited from :class:`~repro.engine.base.EvaluatorBase`
+unchanged, so a kernel autotune run is driven, deduped, budgeted, and
+warm-started exactly like a schedule search.
+
+Measurement protocol per canonical-unique candidate:
+
+  1. **compile phase** — build every candidate's runner and run it
+     once (``block_until_ready``), asserting value correctness against
+     ``runner.reference()`` via the shared wallclock gate. With
+     ``compile_mode="batch"`` (the default) this phase covers the
+     *whole batch before any timing starts*, so XLA compile time
+     amortizes the way the vectorized backend amortizes Python
+     dispatch — timings never absorb a neighbor's compile;
+     ``compile_mode="per_candidate"`` interleaves (the naive loop,
+     kept for the BENCH comparison).
+  2. **timing phase** — ``warmup - 1`` further calls, then ``repeats``
+     timed calls (``block_until_ready`` inside the stopwatch), record
+     the median.
+
+The store fingerprint keys on the measuring platform
+(``jax.default_backend()``) in addition to the timing protocol: a CPU
+interpret-mode sweep and a TPU sweep of the same grid are different
+experiments and must never warm-start each other.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.costmodel import Machine
+from repro.engine.base import EvaluatorBase
+from repro.engine.wallclock import _as_output_map, assert_outputs_close
+from repro.space.params import ParamSpace
+
+
+class KernelWallclockEvaluator(EvaluatorBase):
+    """Wall-clock evaluation of a :class:`ParamSpace` with a runner."""
+
+    backend = "wallclock"
+
+    def __init__(self, space: ParamSpace,
+                 machine: Machine | None = None,
+                 noise_sigma: float = 0.0, noise_seed: int = 0, *,
+                 repeats: int = 5, warmup: int = 1,
+                 check_values: bool = True, rtol: float = 1e-4,
+                 atol: float = 1e-6, compile_mode: str = "batch",
+                 **base_kwargs):
+        super().__init__(space, machine, noise_sigma, noise_seed,
+                         **base_kwargs)
+        runner = getattr(self.space, "runner", None)
+        if runner is None:
+            raise ValueError(
+                f"design space {self.space.name!r} has no KernelRunner "
+                "attached; the param-space wallclock backend needs "
+                "runner= on the ParamSpace (build + reference)")
+        if compile_mode not in ("batch", "per_candidate"):
+            raise ValueError(
+                f"compile_mode must be 'batch' or 'per_candidate', "
+                f"got {compile_mode!r}")
+        self.runner = runner
+        self.repeats = max(1, repeats)
+        self.warmup = max(1, warmup)
+        self.check_values = check_values
+        self.rtol = rtol
+        self.atol = atol
+        self.compile_mode = compile_mode
+        self.n_checked = 0
+        self._reference: dict | None = None
+
+    def _objective_key(self) -> str:
+        """Kernel wall clock is platform-specific on top of being
+        protocol-specific: CPU interpret-mode and TPU sweeps of the
+        same grid must never share store entries. (``compile_mode`` is
+        deliberately excluded — it moves compile cost around but the
+        timed quantity is the same.)"""
+        import jax
+        return (f"kernel-wallclock:platform={jax.default_backend()}:"
+                f"repeats={self.repeats}:warmup={self.warmup}")
+
+    # -- reference outputs (computed lazily, once) -------------------------
+    def _reference_outputs(self) -> dict:
+        if self._reference is None:
+            self._reference = _as_output_map(self.runner.reference())
+        return self._reference
+
+    def _check(self, out, candidate) -> None:
+        assert_outputs_close(
+            out, self._reference_outputs(), rtol=self.rtol,
+            atol=self.atol,
+            context=(f" for candidate "
+                     f"({self.space.describe(candidate)}) — kernel "
+                     "output failed the value-correctness gate"))
+        self.n_checked += 1
+
+    def _measure_batch(self, candidates: Sequence,
+                       encoded: np.ndarray | None = None) -> list[float]:
+        import jax
+
+        out: list[float] = []
+        try:
+            runs = []
+            for cand in candidates:
+                run = self.runner.build(self.space.as_dict(cand))
+                runs.append(run)
+                if self.compile_mode == "batch":
+                    # Compile + gate the whole batch ahead of timing.
+                    result = jax.block_until_ready(run())
+                    if self.check_values:
+                        self._check(result, cand)
+            for cand, run in zip(candidates, runs):
+                if self.compile_mode == "per_candidate":
+                    result = jax.block_until_ready(run())
+                    if self.check_values:
+                        self._check(result, cand)
+                for _ in range(self.warmup - 1):
+                    jax.block_until_ready(run())
+                times = []
+                for _ in range(self.repeats):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(run())
+                    times.append(time.perf_counter() - t0)
+                out.append(statistics.median(times))
+        finally:
+            # Same salvage contract as the executor backend: if a
+            # candidate fails the value gate mid-batch, the timings
+            # already paid for are banked (memo cache + store) and
+            # metered as misses on their next lookup.
+            if encoded is not None and len(out) < len(candidates):
+                self._salvage_partial(encoded[:len(out)], out)
+        return out

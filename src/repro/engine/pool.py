@@ -83,6 +83,12 @@ class PoolEvaluator(EvaluatorBase):
                  start_method: str | None = None, **base_kwargs):
         super().__init__(graph, machine, noise_sigma, noise_seed,
                          **base_kwargs)
+        if self.graph is None:
+            raise TypeError(
+                "the pool backend shards schedule simulations of a "
+                f"Graph; design space {self.space.name!r} has no graph "
+                "(use backend='sim' for spaces with an analytic cost, "
+                "or 'wallclock' for kernel runners)")
         self.n_workers = n_workers or (os.cpu_count() or 2)
         self.min_shard = max(1, min_shard)
         if start_method is None:

@@ -364,7 +364,14 @@ class VectorizedEvaluator(EvaluatorBase):
                  **base_kwargs):
         super().__init__(graph, machine, noise_sigma, noise_seed,
                          **base_kwargs)
-        self._tables = GraphTables(graph, self.machine, self._durations)
+        if self.graph is None:
+            raise TypeError(
+                "the vectorized backend simulates schedules of a "
+                f"Graph; design space {self.space.name!r} has no graph "
+                "(use backend='sim' for spaces with an analytic cost, "
+                "or 'wallclock' for kernel runners)")
+        self._tables = GraphTables(self.graph, self.machine,
+                                   self._durations)
 
     def _measure_batch(self, schedules: Sequence[Schedule],
                        encoded: np.ndarray | None = None) -> list[float]:

@@ -50,6 +50,39 @@ def reference_schedule(graph: Graph) -> Schedule:
         for n in graph.topological_order()))
 
 
+def _as_output_map(out) -> dict[str, np.ndarray]:
+    """Normalize a runner's outputs (mapping / sequence / single array)
+    to named numpy arrays for comparison."""
+    if isinstance(out, Mapping):
+        return {str(k): np.asarray(v) for k, v in out.items()}
+    if isinstance(out, (tuple, list)):
+        return {f"out{i}": np.asarray(v) for i, v in enumerate(out)}
+    return {"out": np.asarray(out)}
+
+
+def assert_outputs_close(got, ref, *, rtol: float, atol: float = 0.0,
+                         context: str = "") -> None:
+    """The wallclock value-correctness gate: every reference output
+    must be reproduced within tolerance.
+
+    Shared by the schedule-space executor backend (outputs are the
+    token-chain environment) and the param-space kernel backend
+    (outputs are whatever the kernel returns); ``context`` names the
+    failing candidate in the assertion message.
+    """
+    ref_map = _as_output_map(ref)
+    got_map = _as_output_map(got)
+    missing = sorted(set(ref_map) - set(got_map))
+    if missing:
+        raise AssertionError(
+            f"candidate is missing reference output(s) {missing}"
+            f"{context}")
+    for k, r in ref_map.items():
+        np.testing.assert_allclose(
+            got_map[k], r, rtol=rtol, atol=atol,
+            err_msg=f"output {k!r} diverged{context}")
+
+
 class ExecutorEvaluator(EvaluatorBase):
     """Evaluation backend measuring jitted token-chain runners.
 
@@ -75,6 +108,13 @@ class ExecutorEvaluator(EvaluatorBase):
                 "and env= (initial values); see engine/README.md")
         super().__init__(graph, machine, noise_sigma, noise_seed,
                          **base_kwargs)
+        if self.graph is None:
+            raise TypeError(
+                "the executor wallclock backend renders schedules of a "
+                f"Graph; design space {self.space.name!r} has no graph "
+                "(parameter spaces evaluate through the param-space "
+                "wallclock runner — attach a KernelRunner and use "
+                "make_evaluator)")
         self.impls = dict(impls)
         self.env = dict(env)
         self.repeats = max(1, repeats)
@@ -103,13 +143,12 @@ class ExecutorEvaluator(EvaluatorBase):
         return self._reference
 
     def _check(self, out: Mapping, schedule: Schedule) -> None:
-        for k, ref in self._reference_outputs().items():
-            got = np.asarray(out[k])
-            np.testing.assert_allclose(
-                got, ref, rtol=self.rtol,
-                err_msg=(f"output {k!r} diverged under schedule "
-                         f"{[str(i) for i in schedule.items]} — sync "
-                         "insertion failed to enforce a dependency"))
+        assert_outputs_close(
+            {k: out[k] for k in self._reference_outputs()},
+            self._reference_outputs(), rtol=self.rtol,
+            context=(f" under schedule "
+                     f"{[str(i) for i in schedule.items]} — sync "
+                     "insertion failed to enforce a dependency"))
         self.n_checked += 1
 
     def _measure_batch(self, schedules: Sequence[Schedule],

@@ -1,0 +1,157 @@
+"""Parameter design spaces for the repo's own Pallas kernels.
+
+The ROADMAP's "autotune the repo's own stack" item: the block/tile
+sizes hard-coded in :mod:`repro.kernels` become searchable
+:class:`~repro.space.params.ParamSpace` instances, evaluated through
+the param-space ``wallclock`` backend (:class:`repro.engine.params.
+KernelWallclockEvaluator` — value-correctness gate against the
+kernel's reference implementation, batch-ahead compilation, persistent
+:class:`~repro.engine.store.EvalStore` warm starts) and distilled into
+per-platform block-size design rules by :func:`repro.rules.distill`.
+
+Each factory closes the kernel over one fixed, seeded problem instance
+(the instance is part of the space — its shape/seed go into the
+``signature`` hashed by the store fingerprint, so measurements from
+different instances never alias). Shapes default small enough that the
+interpret-mode (CPU) sweep stays in test budgets; pass bigger ones for
+a real tuning run on TPU.
+
+These constructors import JAX; :mod:`repro.space` registers them
+lazily (``make_space("flash_attention")``) so the protocol layer stays
+importable on JAX-free installs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.space.params import KernelRunner, ParamSpace
+
+__all__ = ["flash_attention_space", "spmv_mulsum_space", "pack_space"]
+
+
+def _divisors_of(seq: int, values) -> tuple[int, ...]:
+    out = tuple(int(v) for v in values if seq % int(v) == 0)
+    if not out:
+        raise ValueError(
+            f"no candidate block size in {tuple(values)} divides "
+            f"sequence length {seq}")
+    return out
+
+
+def flash_attention_space(*, batch: int = 1, heads: int = 2,
+                          seq: int = 128, head_dim: int = 64,
+                          block_values=(16, 32, 64, 128),
+                          causal: bool = True, seed: int = 0,
+                          interpret: bool | None = None) -> ParamSpace:
+    """(block_q, block_k) grid for :func:`repro.kernels.
+    flash_attention.ops.mha` on one seeded self-attention instance.
+
+    Block values are filtered to divisors of ``seq`` so the padded and
+    unpadded paths measure the same problem (and causal right-aligned
+    masking needs equal q/kv padding anyway).
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention.ops import mha
+    from repro.kernels.flash_attention.ref import attention_ref
+
+    blocks = _divisors_of(seq, block_values)
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal(
+        (batch, heads, seq, head_dim)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal(
+        (batch, heads, seq, head_dim)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal(
+        (batch, heads, seq, head_dim)).astype(np.float32))
+
+    def build(params: dict):
+        bq, bk = params["block_q"], params["block_k"]
+
+        def run():
+            return mha(q, k, v, causal=causal, block_q=bq,
+                       block_k=bk, interpret=interpret)
+        return run
+
+    return ParamSpace(
+        "flash_attention",
+        [("block_q", blocks), ("block_k", blocks)],
+        runner=KernelRunner(
+            build=build,
+            reference=lambda: attention_ref(q, k, v, causal=causal)),
+        signature=(f"mha:b={batch}:h={heads}:sq={seq}:skv={seq}:"
+                   f"d={head_dim}:causal={causal}:dtype=float32:"
+                   f"seed={seed}"))
+
+
+def spmv_mulsum_space(*, n: int = 1024, k: int = 8,
+                      block_values=(64, 128, 256, 512),
+                      seed: int = 0,
+                      interpret: bool | None = None) -> ParamSpace:
+    """block_n grid for the ELL SpMV fused multiply-reduce
+    (:func:`repro.kernels.spmv.ops.ell_matvec`) on one seeded
+    band-structured matrix."""
+    import jax.numpy as jnp
+
+    from repro.kernels.spmv.ops import ell_matvec
+    from repro.kernels.spmv.ref import ell_matvec_ref
+
+    rng = np.random.default_rng(seed)
+    vals = jnp.asarray(rng.standard_normal((n, k)).astype(np.float32))
+    cols = jnp.asarray(
+        rng.integers(0, n, size=(n, k)).astype(np.int32))
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+
+    def build(params: dict):
+        bn = params["block_n"]
+
+        def run():
+            return ell_matvec(vals, cols, x, block_n=bn,
+                              interpret=interpret)
+        return run
+
+    return ParamSpace(
+        "spmv_mulsum",
+        [("block_n", tuple(int(v) for v in block_values))],
+        runner=KernelRunner(
+            build=build,
+            reference=lambda: ell_matvec_ref(vals, cols, x)),
+        signature=(f"ell_matvec:n={n}:k={k}:dtype=float32:"
+                   f"seed={seed}"))
+
+
+def pack_space(*, n: int = 4096, m: int = 512,
+               block_c_values=(64, 128, 256),
+               chunk_values=(256, 512, 1024),
+               seed: int = 0, interpret: bool = True) -> ParamSpace:
+    """(block_c, chunk) grid for the chunked one-hot gather kernel
+    (:func:`repro.kernels.pack.kernel.pack`) on one seeded index set.
+
+    Tunes the kernel directly (the :mod:`repro.kernels.pack.ops`
+    wrapper pins the kernel defaults) — a winning rule here is exactly
+    what that wrapper should adopt per platform.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.pack.kernel import pack as pack_kernel
+    from repro.kernels.pack.ref import pack_ref
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, n, size=m).astype(np.int32))
+
+    def build(params: dict):
+        bc, ch = params["block_c"], params["chunk"]
+
+        def run():
+            return pack_kernel(x, idx, block_c=bc, chunk=ch,
+                               interpret=interpret)
+        return run
+
+    return ParamSpace(
+        "pack",
+        [("block_c", tuple(int(v) for v in block_c_values)),
+         ("chunk", tuple(int(v) for v in chunk_values))],
+        runner=KernelRunner(
+            build=build,
+            reference=lambda: pack_ref(x, idx)),
+        signature=f"pack:n={n}:m={m}:dtype=float32:seed={seed}")

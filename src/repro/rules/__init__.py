@@ -16,12 +16,11 @@ one subsystem, mirroring the :mod:`repro.engine` refactor:
 * :mod:`repro.rules.pipeline` — :func:`distill`, the end-to-end
   search-result -> :class:`RuleReport` API.
 
-The old homes (:mod:`repro.core.labels` / :mod:`repro.core.dtree` /
-:mod:`repro.core.rules`) remain as import shims, like
-:mod:`repro.search.evaluator`. This package never imports
-:mod:`repro.search` at runtime — the dependency points search -> rules.
-See README.md in this directory for the subsystem map and determinism
-guarantees.
+This package never imports :mod:`repro.search` at runtime — the
+dependency points search -> rules (``repro.core`` re-exports the
+moved names for one-stop imports; the old ``core/{labels,dtree,
+rules}.py`` shim modules are deleted). See README.md in this
+directory for the subsystem map and determinism guarantees.
 """
 from repro.rules.boost import GradientBoostedSurrogate, OnlineSurrogateBase
 from repro.rules.labels import (Labeling, find_peaks, label_times,

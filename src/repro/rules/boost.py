@@ -27,15 +27,18 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.dag import Graph, Schedule
-from repro.core.features import Feature, FeatureBasis, apply_features
+from repro.core.features import Feature
 from repro.rules.trees import Presort, RegressionTree, forest_leaf_values
+from repro.space.base import DesignSpace, as_space
 
 
 class OnlineSurrogateBase:
     """Corpus + refit bookkeeping shared by the online surrogates.
 
-    Observations accumulate into an incremental
-    :class:`~repro.core.features.FeatureBasis`; subclasses implement
+    Observations accumulate into the design space's incremental
+    feature basis (:class:`~repro.core.features.FeatureBasis` for
+    schedule spaces, the threshold basis for parameter grids);
+    subclasses implement
     ``_fit`` (rebuild the model from the whole corpus) and are refit
     lazily — on the first ``predict`` after the corpus has grown past a
     geometric-backoff threshold. Each refit rebuilds the feature matrix
@@ -45,10 +48,12 @@ class OnlineSurrogateBase:
     (amortized) while the model stays fresh.
     """
 
-    def __init__(self, graph: Graph, refit_every: int = 8):
-        self.graph = graph
+    def __init__(self, graph: "Graph | DesignSpace",
+                 refit_every: int = 8):
+        self.space = as_space(graph)
+        self.graph = getattr(self.space, "graph", None)
         self.refit_every = max(1, refit_every)
-        self.basis = FeatureBasis(graph)
+        self.basis = self.space.feature_basis()
         self._times: list[float] = []
         self._fitted_n = -1          # observation count at last fit
 
@@ -134,7 +139,7 @@ class GradientBoostedSurrogate(OnlineSurrogateBase):
 
     def _leaf_matrix(self, schedules: list[Schedule]) -> np.ndarray:
         """(n_trees, n_schedules) per-tree leaf values, one descent."""
-        X = apply_features(self.graph, schedules, self._features) \
+        X = self.space.apply_features(schedules, self._features) \
             .astype(np.float64)
         return forest_leaf_values(self._trees, X)
 

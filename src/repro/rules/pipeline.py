@@ -19,9 +19,14 @@ times) for the Table-V class-range accuracy — optionally widened by
 ``range_widen`` for noise-dosed measurements.
 
 ``distill`` is deterministic and duck-typed: it needs only
-``.graph``, ``.schedules`` and ``.times`` from the search result, so
-any corpus (an exhaustive sweep, an MCTS subset, replayed logs) can be
-distilled without importing :mod:`repro.search`.
+``.schedules``, ``.times`` and a design space (``.space`` /
+``.design_space()`` when present, else ``.graph``) from the search
+result, so any corpus (an exhaustive sweep, an MCTS subset, replayed
+logs, a kernel parameter sweep) can be distilled without importing
+:mod:`repro.search`. Featurization goes through the space — pairwise
+order/stream features for schedule spaces, threshold features
+(``block_q >= 64``) for kernel parameter spaces — so the same
+Algorithm-1 tree distills design rules for either.
 """
 from __future__ import annotations
 
@@ -32,23 +37,40 @@ from typing import Callable, Sequence, TYPE_CHECKING
 
 import numpy as np
 
-from repro.core.features import FeatureMatrix, featurize, featurize_like
+from repro.core.features import FeatureMatrix
 from repro.rules.labels import Labeling, label_times
 from repro.rules.rulesets import (RuleSet, annotate_vs_canonical,
                                   class_range_accuracy, extract_rulesets,
                                   render_rules_table, rules_by_class)
 from repro.rules.trees import DecisionTree, TreeSearchTrace, algorithm1
+from repro.space.base import DesignSpace, as_space
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, no runtime dep
     from repro.core.dag import Graph, Schedule
     from repro.search.pipeline import SearchResult
 
 
+def _space_of(result) -> DesignSpace:
+    """The corpus's design space, however the result spells it.
+
+    ``SearchResult`` carries ``design_space()``; other duck-typed
+    corpora may expose a ``.space`` attribute or just a ``.graph``
+    (normalized through :func:`~repro.space.base.as_space`).
+    """
+    ds = getattr(result, "design_space", None)
+    if callable(ds):
+        return ds()
+    sp = getattr(result, "space", None)
+    if isinstance(sp, DesignSpace):
+        return sp
+    return as_space(result.graph)
+
+
 @dataclasses.dataclass
 class RuleReport:
     """Everything the labels -> tree -> rules pipeline produced."""
 
-    graph: "Graph"
+    graph: "Graph | None"          # None for graph-less (parameter) spaces
     feature_matrix: FeatureMatrix
     labeling: Labeling
     tree: DecisionTree
@@ -171,8 +193,9 @@ def distill(result: "SearchResult",
                 "matrix must cover exactly the result's schedule list")
         fm = features
     else:
+        sp = _space_of(result)
         fm = staged("featurize",
-                    lambda: featurize(result.graph, result.schedules))
+                    lambda: sp.featurize(list(result.schedules)))
     trace = TreeSearchTrace([], [], [])
     tree = staged("tree",
                   lambda: algorithm1(fm.X, labeling.labels, trace=trace,
@@ -194,13 +217,15 @@ def distill(result: "SearchResult",
             ranges = [(lo * (1.0 - range_widen),
                        hi * (1.0 + range_widen))
                       for lo, hi in labeling.class_ranges()]
-            Xf = featurize_like(result.graph, list(space_schedules), fm)
+            Xf = _space_of(result).apply_features(
+                list(space_schedules), fm.features)
             return class_range_accuracy(tree, Xf, space_times, ranges)
 
         acc = staged("accuracy", accuracy)
 
     return RuleReport(
-        graph=result.graph, feature_matrix=fm, labeling=labeling,
+        graph=getattr(result, "graph", None),
+        feature_matrix=fm, labeling=labeling,
         tree=tree, trace=trace, rulesets=rulesets,
         n_schedules=len(result.schedules),
         training_error=tree.training_error(fm.X, labeling.labels),

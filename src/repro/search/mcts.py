@@ -22,12 +22,17 @@ Tree nodes are schedule prefixes P_k. The four phases:
   backprop       update t_min/t_max on every node along the path.
 
 The strategy split: ``propose`` runs selection + expansion + rollout and
-returns the completed schedules; ``observe`` backpropagates the measured
-time along the stored rollout path. With ``propose(1)`` per evaluation
-this is exactly the paper's loop (and what the legacy
-:class:`repro.core.mcts.MCTS` wrapper does); larger proposal batches
+returns the completed candidates; ``observe`` backpropagates the
+measured time along the stored rollout path. With ``propose(1)`` per
+evaluation this is exactly the paper's loop; larger proposal batches
 trade a little selection fidelity (tree statistics lag by up to one
 batch) for batched evaluation throughput.
+
+The tree is space-generic: "prefixes" are move sequences of any
+:class:`~repro.space.base.DesignSpace` (DAG-eligible ``BoundOp``\\ s
+for schedule spaces, per-dimension value assignments for parameter
+grids), expanded through ``space.moves`` and keyed by
+``space.move_key``.
 """
 from __future__ import annotations
 
@@ -35,7 +40,7 @@ import math
 import random
 
 from repro.core.dag import BoundOp, Graph, Schedule
-from repro.search.strategy import eligible_items
+from repro.space.base import DesignSpace, as_space
 
 EXPLORATION_C = math.sqrt(2.0)
 
@@ -67,12 +72,14 @@ class Node:
 class MCTSSearch:
     """Paper-faithful MCTS behind the strategy protocol."""
 
-    def __init__(self, graph: Graph, n_streams: int, seed: int = 0):
-        self.graph = graph
-        self.n_streams = n_streams
+    def __init__(self, graph: "Graph | DesignSpace",
+                 n_streams: int | None = None, seed: int = 0):
+        self.space = as_space(graph, n_streams)
+        self.graph = getattr(self.space, "graph", None)
+        self.n_streams = getattr(self.space, "n_streams", None)
         self.rng = random.Random(seed)
         self.root = Node(None, None)
-        # Rollout leaves awaiting their observation, by schedule key.
+        # Rollout leaves awaiting their observation, by candidate key.
         self._pending: dict[tuple, Node] = {}
 
     # -- phase 1: selection ------------------------------------------------
@@ -100,7 +107,7 @@ class MCTSSearch:
             # zero-rollout child.
             if any(key not in node.children or
                    node.children[key].n_rollouts == 0
-                   for key in ((o.name, o.stream) for o in opts)):
+                   for key in (self.space.move_key(o) for o in opts)):
                 return node
             if not node.children:
                 return node  # complete leaf (shouldn't be selected; guard)
@@ -109,20 +116,20 @@ class MCTSSearch:
 
     def _expandable(self, node: Node) -> list[BoundOp]:
         if node._expandable is None:
-            node._expandable = eligible_items(
-                self.graph, node.prefix(), self.n_streams)
+            node._expandable = self.space.moves(node.prefix())
         return node._expandable
 
     # -- phase 2: expansion ------------------------------------------------
     def _expand(self, node: Node) -> Node:
         opts = self._expandable(node)
+        move_key = self.space.move_key
         fresh = [o for o in opts
-                 if (o.name, o.stream) not in node.children or
-                 node.children[(o.name, o.stream)].n_rollouts == 0]
+                 if move_key(o) not in node.children or
+                 node.children[move_key(o)].n_rollouts == 0]
         if not fresh:  # fully rolled-out interior node: descend randomly
             return node
         choice = self.rng.choice(fresh)
-        key = (choice.name, choice.stream)
+        key = move_key(choice)
         if key not in node.children:
             node.children[key] = Node(choice, node)
         return node.children[key]
@@ -136,11 +143,11 @@ class MCTSSearch:
             if not opts:
                 break
             choice = self.rng.choice(opts)
-            key = (choice.name, choice.stream)
+            key = self.space.move_key(choice)
             if key not in cur.children:
                 cur.children[key] = Node(choice, cur)
             cur = cur.children[key]
-        return cur, Schedule(tuple(cur.prefix()))
+        return cur, self.space.finalize(cur.prefix())
 
     # -- phase 4: backpropagation -------------------------------------------
     def _backprop(self, leaf: Node, t: float) -> None:
@@ -166,8 +173,8 @@ class MCTSSearch:
     def _materialize(self, schedule: Schedule) -> Node:
         """Walk (creating as needed) the tree path for ``schedule``."""
         node = self.root
-        for item in schedule.items:
-            key = (item.name, item.stream)
+        for item in self.space.candidate_moves(schedule):
+            key = self.space.move_key(item)
             if key not in node.children:
                 node.children[key] = Node(item, node)
             node = node.children[key]
@@ -182,12 +189,13 @@ class MCTSSearch:
             node = self._select()
             node = self._expand(node)
             leaf, schedule = self._rollout(node)
-            self._pending[schedule.key()] = leaf
+            self._pending[self.space.candidate_key(schedule)] = leaf
             out.append(schedule)
         return out
 
     def observe(self, schedule: Schedule, time: float) -> None:
-        leaf = self._pending.pop(schedule.key(), None)
+        leaf = self._pending.pop(self.space.candidate_key(schedule),
+                                 None)
         if leaf is None:
             # Re-observation or an externally produced schedule: its tree
             # path is the schedule itself.

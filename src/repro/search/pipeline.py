@@ -27,10 +27,11 @@ import numpy as np
 
 from repro.core.costmodel import Machine
 from repro.core.dag import Graph, Schedule
-from repro.core.features import FeatureMatrix, featurize
+from repro.core.features import FeatureMatrix
 from repro.engine.base import EvaluatorBase, canonical_key
 from repro.rules.labels import Labeling, label_times
 from repro.search.strategy import SearchStrategy
+from repro.space.base import DesignSpace, as_space
 
 
 def _tie_key(schedule: Schedule) -> tuple:
@@ -47,9 +48,15 @@ def _tie_key(schedule: Schedule) -> tuple:
 
 @dataclasses.dataclass
 class SearchResult:
-    """Deduplicated observations from one search run."""
+    """Deduplicated observations from one search run.
 
-    graph: Graph
+    ``graph`` is the searched DAG for schedule spaces and ``None`` for
+    non-graph design spaces; ``space`` always carries the
+    :class:`~repro.space.base.DesignSpace` searched (filled in lazily
+    from ``graph`` for results constructed the historical way).
+    """
+
+    graph: Graph | None
     schedules: list[Schedule]
     times: list[float]
     n_proposed: int
@@ -58,6 +65,13 @@ class SearchResult:
     # First-time evaluations served by the persistent cross-run store
     # (repro.engine.store) instead of a paid measurement; 0 storeless.
     store_hits: int = 0
+    space: DesignSpace | None = None
+
+    def design_space(self) -> DesignSpace:
+        """The searched space (wrapping ``graph`` when not recorded)."""
+        if self.space is None:
+            self.space = as_space(self.graph)
+        return self.space
 
     def best(self) -> tuple[Schedule, float]:
         """The fastest observed (schedule, time).
@@ -75,9 +89,10 @@ class SearchResult:
                 "nothing) has no best schedule")
         times = np.asarray(self.times, dtype=np.float64)
         ties = np.flatnonzero(times == times.min())
+        tie_key = self.design_space().tie_key
         i = int(ties[0]) if ties.size == 1 else \
             min((int(j) for j in ties),
-                key=lambda j: _tie_key(self.schedules[j]))
+                key=lambda j: tie_key(self.schedules[j]))
         return self.schedules[i], self.times[i]
 
     def times_array(self) -> np.ndarray:
@@ -86,11 +101,11 @@ class SearchResult:
     def dataset(self) -> tuple[FeatureMatrix, Labeling, np.ndarray]:
         """(features, labels, times) for the rules pipeline."""
         times = self.times_array()
-        return (featurize(self.graph, self.schedules),
+        return (self.design_space().featurize(self.schedules),
                 label_times(times), times)
 
 
-def run_search(graph: Graph, strategy: SearchStrategy,
+def run_search(graph: "Graph | DesignSpace", strategy: SearchStrategy,
                machine: Machine | None = None,
                budget: int | None = 2000,
                batch_size: int = 1,

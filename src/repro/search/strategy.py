@@ -23,8 +23,10 @@ import random
 from typing import Iterator, Protocol, runtime_checkable
 
 from repro.core.costmodel import Machine, op_durations, simulate
-from repro.core.dag import BoundOp, Graph, OpKind, Schedule
-from repro.core.enumerate import enumerate_schedules
+from repro.core.dag import BoundOp, Graph, Schedule
+from repro.space.base import DesignSpace, as_space
+from repro.space.schedule import (eligible_items,  # noqa: F401 (re-export)
+                                  random_schedule)
 
 
 @runtime_checkable
@@ -83,52 +85,20 @@ class PoolSearchStrategy(SearchStrategy, Protocol):
         ...
 
 
-def eligible_items(graph: Graph, prefix: list[BoundOp],
-                   n_streams: int) -> list[BoundOp]:
-    """Eligible next items from a prefix, stream-bijection pruned.
-
-    GPU ops may bind to any stream already in use, or the lowest-numbered
-    unused stream — the canonical first-use labeling of §III-C2, so every
-    complete schedule built through this helper is canonical by
-    construction. Shared by MCTS expansion, random rollouts, and greedy
-    completion.
-    """
-    scheduled = {b.name for b in prefix}
-    used = sorted({b.stream for b in prefix if b.stream is not None})
-    options: list[BoundOp] = []
-    for name in graph.eligible(scheduled):
-        if graph.ops[name].kind is OpKind.GPU:
-            for s in used:
-                options.append(BoundOp(name, s))
-            if len(used) < n_streams:
-                options.append(BoundOp(name, len(used)))
-        else:
-            options.append(BoundOp(name))
-    return options
-
-
-def random_schedule(graph: Graph, n_streams: int,
-                    rng: random.Random) -> Schedule:
-    """Uniform random canonical schedule (the MCTS rollout policy)."""
-    prefix: list[BoundOp] = []
-    while True:
-        options = eligible_items(graph, prefix, n_streams)
-        if not options:
-            return Schedule(tuple(prefix))
-        prefix.append(rng.choice(options))
-
-
 class ExhaustiveSearch:
-    """Adapter over :func:`repro.core.enumerate.enumerate_schedules`.
+    """Full enumeration in the space's canonical order.
 
-    Proposes the canonical enumeration order; ``observe`` is a no-op.
-    Exhausts after one full sweep of the space.
+    Proposes :meth:`~repro.space.base.DesignSpace.enumerate_candidates`
+    (:func:`repro.core.enumerate.enumerate_schedules` for schedule
+    spaces); ``observe`` is a no-op. Exhausts after one full sweep.
     """
 
-    def __init__(self, graph: Graph, n_streams: int):
-        self.graph = graph
-        self.n_streams = n_streams
-        self._iter: Iterator[Schedule] = enumerate_schedules(graph, n_streams)
+    def __init__(self, graph: "Graph | DesignSpace",
+                 n_streams: int | None = None):
+        self.space = as_space(graph, n_streams)
+        self.graph = getattr(self.space, "graph", None)
+        self.n_streams = getattr(self.space, "n_streams", None)
+        self._iter: Iterator = self.space.enumerate_candidates()
 
     def propose(self, budget: int) -> list[Schedule]:
         out: list[Schedule] = []
@@ -150,13 +120,15 @@ class RandomSearch:
     only stopping criterion.
     """
 
-    def __init__(self, graph: Graph, n_streams: int, seed: int = 0):
-        self.graph = graph
-        self.n_streams = n_streams
+    def __init__(self, graph: "Graph | DesignSpace",
+                 n_streams: int | None = None, seed: int = 0):
+        self.space = as_space(graph, n_streams)
+        self.graph = getattr(self.space, "graph", None)
+        self.n_streams = getattr(self.space, "n_streams", None)
         self.rng = random.Random(seed)
 
     def propose(self, budget: int) -> list[Schedule]:
-        return [random_schedule(self.graph, self.n_streams, self.rng)
+        return [self.space.random_candidate(self.rng)
                 for _ in range(budget)]
 
     def observe(self, schedule: Schedule, time: float) -> None:

@@ -39,14 +39,13 @@ import random
 import numpy as np
 
 from repro.core.costmodel import Machine
-from repro.core.dag import BoundOp, Graph, Schedule
-from repro.core.features import Feature, apply_features
+from repro.core.dag import Graph, Schedule
+from repro.core.features import Feature
 from repro.driver.acquisitions import resolve_acquisition
-from repro.engine.base import canonical_key
 from repro.rules.boost import GradientBoostedSurrogate, OnlineSurrogateBase
 from repro.search.mcts import MCTSSearch
-from repro.search.strategy import (GreedyCostModel, eligible_items,
-                                   random_schedule)
+from repro.search.strategy import GreedyCostModel
+from repro.space.base import DesignSpace, as_space
 
 
 # -- rank statistics ---------------------------------------------------------
@@ -90,7 +89,7 @@ class RidgeSurrogate(OnlineSurrogateBase):
     no (or degenerate) data it predicts the observed mean.
     """
 
-    def __init__(self, graph: Graph, l2: float = 1e-3,
+    def __init__(self, graph: "Graph | DesignSpace", l2: float = 1e-3,
                  refit_every: int = 8):
         super().__init__(graph, refit_every=refit_every)
         self.l2 = l2
@@ -129,7 +128,7 @@ class RidgeSurrogate(OnlineSurrogateBase):
             self._fit()
         if self._w is None:
             return np.full(len(schedules), self._y_mean, dtype=np.float64)
-        X = apply_features(self.graph, schedules, self._features) \
+        X = self.space.apply_features(schedules, self._features) \
             .astype(np.float64)
         return self._y_mean + (X - self._x_mean) @ self._w
 
@@ -155,8 +154,8 @@ register_surrogate("ridge", RidgeSurrogate)
 register_surrogate("boost", GradientBoostedSurrogate)
 
 
-def make_surrogate(graph: Graph, surrogate: str = "ridge",
-                   **kwargs):
+def make_surrogate(graph: "Graph | DesignSpace",
+                   surrogate: str = "ridge", **kwargs):
     """Construct a surrogate model by registry name."""
     try:
         factory = SURROGATES[surrogate]
@@ -211,7 +210,8 @@ class SurrogateGuided:
     acquisition per run without touching strategy state.
     """
 
-    def __init__(self, graph: Graph, n_streams: int, seed: int = 0,
+    def __init__(self, graph: "Graph | DesignSpace",
+                 n_streams: int | None = None, seed: int = 0,
                  warmup: int = 32, pool_factor: int = 10,
                  elite_frac: float = 0.25, mutation_prob: float = 0.5,
                  l2: float | None = None, refit_every: int | None = None,
@@ -220,8 +220,9 @@ class SurrogateGuided:
                  acquisition_kwargs: dict | None = None):
         if pool_factor < 1:
             raise ValueError("pool_factor must be >= 1")
-        self.graph = graph
-        self.n_streams = n_streams
+        self.space = as_space(graph, n_streams)
+        self.graph = getattr(self.space, "graph", None)
+        self.n_streams = getattr(self.space, "n_streams", None)
         self.rng = random.Random(seed)
         self.warmup = warmup
         self.pool_factor = pool_factor
@@ -237,7 +238,8 @@ class SurrogateGuided:
                 kwargs.setdefault("l2", l2)
             if refit_every is not None:
                 kwargs.setdefault("refit_every", refit_every)
-            self.surrogate = make_surrogate(graph, surrogate, **kwargs)
+            self.surrogate = make_surrogate(self.space, surrogate,
+                                            **kwargs)
         else:
             if (surrogate_kwargs is not None or l2 is not None
                     or refit_every is not None):
@@ -256,20 +258,13 @@ class SurrogateGuided:
 
     # -- candidate generation ------------------------------------------
     def _mutate(self, elite: Schedule) -> Schedule:
-        items = list(elite.items)
-        cut = self.rng.randrange(1, len(items)) if len(items) > 1 else 0
-        prefix: list[BoundOp] = items[:cut]
-        while True:
-            options = eligible_items(self.graph, prefix, self.n_streams)
-            if not options:
-                return Schedule(tuple(prefix))
-            prefix.append(self.rng.choice(options))
+        return self.space.mutate(elite, self.rng)
 
     def _candidate(self) -> Schedule:
         if self._elites and self.rng.random() < self.mutation_prob:
             _, elite = self.rng.choice(self._elites)
             return self._mutate(elite)
-        return random_schedule(self.graph, self.n_streams, self.rng)
+        return self.space.random_candidate(self.rng)
 
     def _pool(self, size: int) -> list[Schedule]:
         """Up to ``size`` novel candidates (deduped, not yet simulated)."""
@@ -279,7 +274,7 @@ class SurrogateGuided:
             if len(pool) >= size:
                 break
             s = self._candidate()
-            key = canonical_key(s)
+            key = self.space.candidate_key(s)
             if key in keys or key in self._observed:
                 continue
             keys.add(key)
@@ -321,15 +316,15 @@ class SurrogateGuided:
         top = np.argsort(scores, kind="stable")[:budget]
         chosen = [pool[i] for i in top]
         for i in top:
-            self._pending[canonical_key(pool[i])] = float(preds[i])
+            self._pending[self.space.candidate_key(pool[i])] = \
+                float(preds[i])
         return chosen
 
     def pad(self, chosen: list[Schedule],
             budget: int) -> list[Schedule]:
         """Fill with uniform rollouts — never starve the search loop."""
         while len(chosen) < budget:
-            chosen.append(random_schedule(self.graph, self.n_streams,
-                                          self.rng))
+            chosen.append(self.space.random_candidate(self.rng))
         return chosen
 
     # -- strategy protocol ---------------------------------------------
@@ -338,13 +333,13 @@ class SurrogateGuided:
             return []
         pool = self.propose_pool(budget)
         if pool is None:  # warmup: nothing to fit yet
-            return [random_schedule(self.graph, self.n_streams, self.rng)
+            return [self.space.random_candidate(self.rng)
                     for _ in range(budget)]
         return self.pad(self.screen(pool, budget, self.acquisition),
                         budget)
 
     def observe(self, schedule: Schedule, time: float) -> None:
-        key = canonical_key(schedule)
+        key = self.space.candidate_key(schedule)
         pred = self._pending.pop(key, None)
         if pred is not None:
             self.screen_log.append((pred, float(time)))

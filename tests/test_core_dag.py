@@ -173,8 +173,9 @@ def test_fine_grained_dag_valid_and_costed():
     g = spmv_dag_fine()
     assert {"Pack_l", "Pack_r", "PostSend_l", "WaitRecv_r",
             "yL", "yR"} <= set(g.ops)
-    m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=0)
-    res = m.run(50)
+    from repro.search import MCTSSearch, run_search
+    res = run_search(g, MCTSSearch(g, 2, seed=0), budget=50,
+                     batch_size=1)
     for s in res.schedules:
         C.validate_schedule(g, s)
     assert all(t > 0 for t in res.times)

@@ -8,8 +8,8 @@ except ImportError:  # tier-1 container: seeded-random fallback
     from _hypothesis_fallback import given, settings, strategies as st
 
 import repro.core as C
-from repro.core.labels import (find_peaks, label_times, peak_prominences,
-                               step_convolve)
+from repro.rules.labels import (find_peaks, label_times, peak_prominences,
+                                step_convolve)
 
 
 # -- labels -------------------------------------------------------------------

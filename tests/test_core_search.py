@@ -3,6 +3,19 @@ import numpy as np
 import pytest
 
 import repro.core as C
+from repro.search import MCTSSearch, run_search
+
+
+def _mcts_run(g, iterations, seed):
+    """Sequential MCTS + analytic objective (the paper's §III-C loop).
+
+    ``batch_size=1`` makes ``run_search`` propose-observe strictly
+    sequentially, which is sequence-identical to the historical
+    ``core.MCTS(...).run(iterations)`` wrapper this replaced.
+    """
+    strategy = MCTSSearch(g, 2, seed=seed)
+    res = run_search(g, strategy, budget=iterations, batch_size=1)
+    return strategy, res
 
 
 @pytest.fixture(scope="module")
@@ -42,8 +55,7 @@ def test_costmodel_overlap_beats_serialization(spmv):
 
 def test_mcts_full_exploration(spmv):
     g, scheds, times = spmv
-    m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=3)
-    res = m.run(10_000)
+    m, res = _mcts_run(g, 10_000, seed=3)
     assert m.root.fully_explored
     assert len(res.schedules) == len(scheds)
     assert np.isclose(min(res.times), times.min())
@@ -52,8 +64,7 @@ def test_mcts_full_exploration(spmv):
 
 def test_mcts_partial_run_unique_and_valid(spmv):
     g, _, _ = spmv
-    m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=0)
-    res = m.run(60)
+    _, res = _mcts_run(g, 60, seed=0)
     keys = {s.key() for s in res.schedules}
     assert len(keys) == len(res.schedules)
     for s in res.schedules:
@@ -62,8 +73,7 @@ def test_mcts_partial_run_unique_and_valid(spmv):
 
 def test_mcts_backprop_ranges(spmv):
     g, _, _ = spmv
-    m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=1)
-    res = m.run(50)
+    m, res = _mcts_run(g, 50, seed=1)
     assert m.root.t_min == min(res.times)
     assert m.root.t_max == max(res.times)
     for child in m.root.children.values():
@@ -76,8 +86,7 @@ def test_table5_accuracy_improves_with_iterations(spmv):
     g, scheds, times = spmv
     accs = []
     for iters in (25, 100, 400):
-        m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=1)
-        res = m.run(iters)
+        _, res = _mcts_run(g, iters, seed=1)
         lab = C.label_times(np.array(res.times))
         fm = C.featurize(g, res.schedules)
         tree = C.algorithm1(fm.X, lab.labels)
@@ -111,8 +120,7 @@ def test_halo3d_future_work_dag():
     from repro.core.dag import halo3d_dag
     g = halo3d_dag()
     assert g.n_vertices() == 39  # 6 faces x 6 ops + Inner + start/end
-    m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=0)
-    res = m.run(120)
+    _, res = _mcts_run(g, 120, seed=0)
     for s in res.schedules[:20]:
         C.validate_schedule(g, s)
     times = np.array(res.times)

@@ -330,18 +330,12 @@ def test_boost_guided_search_runs_end_to_end():
     assert q["n_screened"] > 0 and q["n_compared"] > 0
 
 
-# -- shims --------------------------------------------------------------------
+# -- re-exports ---------------------------------------------------------------
 
-def test_core_shims_are_the_rules_subsystem():
-    """core.{dtree,labels,rules} must re-export the rules modules."""
+def test_core_reexports_the_rules_subsystem():
+    """repro.core's one-stop names must be the rules-subsystem objects."""
     assert C.DecisionTree is R.DecisionTree
     assert C.algorithm1 is R.algorithm1
     assert C.label_times is R.label_times
     assert C.extract_rulesets is R.extract_rulesets
     assert C.class_range_accuracy is R.class_range_accuracy
-    from repro.core.dtree import DecisionTree as ShimTree
-    from repro.core.labels import peak_prominences as shim_prom
-    from repro.core.rules import render_rules_table as shim_render
-    assert ShimTree is R.DecisionTree
-    assert shim_prom is R.peak_prominences
-    assert shim_render is R.render_rules_table

@@ -141,8 +141,9 @@ def test_stepdag_schedule_search_prefers_overlap():
     costs = StepCosts(fwd_flops=2e12, bwd_flops=4e12, fwd_bytes=1e9,
                       bwd_bytes=2e9, grad_bytes=2e9)
     g = with_comm_durations(train_step_dag(4, costs), 50e9)
-    m = C.MCTS(g, 2, lambda s: C.makespan(g, s), seed=0)
-    res = m.run(300)
+    from repro.search import MCTSSearch, run_search
+    res = run_search(g, MCTSSearch(g, 2, seed=0), budget=300,
+                     batch_size=1)
     best = res.schedules[int(np.argmin(res.times))]
     worst_t = max(res.times)
     best_t = min(res.times)

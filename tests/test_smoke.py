@@ -1,7 +1,8 @@
 """End-to-end smoke gate (select with ``pytest -m smoke``)."""
 import pytest
 
-from benchmarks.smoke import run_backend_smoke, run_smoke, run_store_smoke
+from benchmarks.smoke import (run_autotune_smoke, run_backend_smoke,
+                              run_smoke, run_store_smoke)
 
 
 @pytest.mark.smoke
@@ -26,6 +27,20 @@ def test_smoke_every_evaluation_backend():
         assert out[backend]["n_schedules"] >= 1
         assert out[backend]["best_us"] > 0.0
     assert out["pool"]["cache_misses"] == out["sim"]["cache_misses"]
+
+
+@pytest.mark.smoke
+def test_smoke_kernel_autotune(tmp_path):
+    """Tiny kernel-space autotune: a 2-point spmv block sweep through
+    the param-space wallclock backend on CPU, warm-started from the
+    store on the second pass (the kernel-space CI warm-start gate)."""
+    out = run_autotune_smoke(str(tmp_path / "autotune.evalstore"))
+    assert out["n_candidates"] == 2
+    assert out["best_us"] > 0.0
+    assert "block_n=" in out["best"]
+    assert not out["warm_cache_restored"]        # tmp file starts cold
+    assert out["second"]["store_hits"] == 2
+    assert out["second"]["misses"] == 0
 
 
 @pytest.mark.smoke
