@@ -8,6 +8,18 @@ writes the same rows as machine-readable JSON
 perf trajectory can accumulate across PRs, e.g.::
 
     PYTHONPATH=src python benchmarks/run.py --json BENCH_4.json
+
+``--baseline BENCH_N.json`` compares the rows just measured against a
+committed baseline file and prints per-row deltas; rows slower than
+``--regression-threshold`` (fractional, default 0.5 — benchmark noise
+on shared CI runners is real) exit nonzero, so the BENCH_2..N
+trajectory is checkable instead of advisory::
+
+    PYTHONPATH=src python benchmarks/run.py --baseline BENCH_7.json
+
+``--trace PATH`` / ``--telemetry`` attach the :mod:`repro.obs`
+registry for the whole bench run (Perfetto trace / summary table) —
+the way to see where a sweep's wall time actually goes.
 """
 from __future__ import annotations
 
@@ -51,11 +63,67 @@ def parse_row(row: str) -> dict:
     return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
+def compare_to_baseline(records: list[dict], baseline: list[dict],
+                        threshold: float = 0.5
+                        ) -> tuple[list[str], list[str]]:
+    """Per-row deltas of ``records`` vs a committed baseline.
+
+    Returns ``(report_lines, regressions)``: one human line per row
+    present in both (delta = (new - old) / old on ``us_per_call``;
+    positive = slower), with rows beyond ``threshold`` flagged and
+    collected into ``regressions``. Rows only on one side are listed
+    but never fail the comparison — the bench set grows every PR.
+    """
+    base = {r["name"]: r["us_per_call"] for r in baseline}
+    new = {r["name"]: r["us_per_call"] for r in records}
+    lines: list[str] = []
+    regressions: list[str] = []
+    for name, us in new.items():
+        old = base.get(name)
+        if old is None:
+            lines.append(f"  new       {name}: {us:.2f} us (no baseline)")
+            continue
+        delta = (us - old) / old if old else 0.0
+        verdict = "ok"
+        if delta > threshold:
+            verdict = "REGRESSED"
+            regressions.append(name)
+        lines.append(f"  {verdict:<9} {name}: {old:.2f} -> {us:.2f} us "
+                     f"({delta:+.1%})")
+    for name in base:
+        if name not in new:
+            lines.append(f"  gone      {name}: only in baseline")
+    return lines, regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as a JSON list to PATH")
+    ap.add_argument("--baseline", metavar="PATH", default=None,
+                    help="compare rows against a committed BENCH_N.json "
+                         "and exit nonzero on regressions beyond "
+                         "--regression-threshold")
+    ap.add_argument("--regression-threshold", type=float, default=0.5,
+                    metavar="FRAC",
+                    help="fractional us_per_call slowdown vs the "
+                         "baseline that counts as a regression "
+                         "(default 0.5 = 50%%)")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Perfetto/Chrome trace of the whole "
+                         "bench run to PATH (repro.obs)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="print the telemetry summary table after the "
+                         "run")
     args = ap.parse_args()
+
+    tel = None
+    if args.trace or args.telemetry:
+        from repro import obs
+        exporters = [obs.PerfettoExporter(args.trace)] if args.trace \
+            else []
+        tel = obs.Telemetry(exporters=exporters)
+        obs.set_current(tel)
 
     rows: list[str] = []
     print("name,us_per_call,derived")
@@ -63,12 +131,36 @@ def main() -> None:
         for row in fn():
             print(row, flush=True)
             rows.append(row)
+    records = [parse_row(row) for row in rows]
+
+    if tel is not None:
+        if args.telemetry:
+            print(tel.summary(), flush=True)
+        tel.close()
+        if args.trace:
+            print(f"# trace written to {args.trace}", flush=True)
+        from repro import obs
+        obs.set_current(None)
 
     if args.json:
-        records = [parse_row(row) for row in rows]
         with open(args.json, "w") as f:
             json.dump(records, f, indent=1)
         print(f"# wrote {len(records)} rows to {args.json}", flush=True)
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        lines, regressions = compare_to_baseline(
+            records, baseline, args.regression_threshold)
+        print(f"# vs baseline {args.baseline} "
+              f"(threshold {args.regression_threshold:+.0%}):")
+        for line in lines:
+            print(line)
+        if regressions:
+            print(f"# {len(regressions)} row(s) regressed: "
+                  f"{', '.join(regressions)}")
+            sys.exit(1)
+        print("# no regressions", flush=True)
 
 
 if __name__ == "__main__":

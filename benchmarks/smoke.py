@@ -106,7 +106,7 @@ def run_backend_smoke(budget: int = 48, seed: int = 0) -> dict:
 
 
 def run_store_smoke(store_path: str, budget: int = 120,
-                    seed: int = 0) -> dict:
+                    seed: int = 0, trace_path: str | None = None) -> dict:
     """The store validating itself: search twice against ``store_path``.
 
     The first pass warms the store if it is cold (on a restored CI
@@ -116,7 +116,16 @@ def run_store_smoke(store_path: str, budget: int = 120,
     byte-identical times. CI calls this after restoring the store from
     the workflow cache, so a stale or corrupt cache fails loudly here
     rather than silently re-simulating.
+
+    The warm pass runs under its own :mod:`repro.obs` telemetry
+    registry: the returned ``second`` dict carries ``measure_spans``
+    (the number of ``engine.measure`` spans — 0 on a true warm replay,
+    the telemetry-side half of the warm-start gate) and ``rounds``
+    (``driver.round`` span count). ``trace_path`` additionally writes
+    the warm pass as a Perfetto trace (the CI trace artifact).
     """
+    from repro import obs
+
     g = C.spmv_dag()
 
     def search():
@@ -126,18 +135,29 @@ def run_store_smoke(store_path: str, budget: int = 120,
                             store_path=store_path)
 
     first = search()
-    second = search()
+    exporters = [obs.PerfettoExporter(trace_path)] if trace_path else []
+    tel = obs.Telemetry(exporters=exporters)
+    with obs.use(tel):
+        second = search()
+    tel.close()
+    spans = tel.spans_by_name()
     assert second.store_hits > 0, \
         "warm search reported no store hits — the store did not persist"
     assert second.cache_misses == 0, \
         f"warm search still measured {second.cache_misses} schedules"
     assert second.times == first.times, \
         "warm replay diverged from the previous run"
+    assert first.telemetry is None and second.telemetry is not None, \
+        "SearchResult.telemetry must track whether a registry was live"
     return {
         "first": {"misses": first.cache_misses,
                   "store_hits": first.store_hits},
         "second": {"misses": second.cache_misses,
-                   "store_hits": second.store_hits},
+                   "store_hits": second.store_hits,
+                   "measure_spans":
+                       spans.get("engine.measure", {}).get("count", 0),
+                   "rounds": spans.get("driver.round", {}).get("count",
+                                                               0)},
         "warm_cache_restored": first.cache_misses == 0,
     }
 

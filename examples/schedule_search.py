@@ -25,11 +25,13 @@ Usage: PYTHONPATH=src python examples/schedule_search.py
            [--surrogate ridge|boost]
            [--acquisition argmin_topk|ucb|expected_improvement]
            [--rules [PATH]] [--store PATH]
+           [--trace PATH] [--telemetry]
 """
 import argparse
 
 import repro.rules as R
 import repro.search as S
+from repro import obs
 from repro.configs import get_config
 from repro.driver import ACQUISITIONS
 from repro.core.stepdag import StepCosts, train_step_dag, \
@@ -109,7 +111,37 @@ def main() -> None:
                     help="render the full design-rule report "
                          "(repro.rules.distill) to PATH, or to stdout "
                          "when given without a value")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome trace-event / Perfetto JSON "
+                         "trace of the whole run (driver rounds, "
+                         "evaluator batches, store traffic, distill "
+                         "stages) to PATH — open it at "
+                         "https://ui.perfetto.dev. Trace-enabled runs "
+                         "attach an ephemeral evaluation store when "
+                         "--store is not given, so the store layer "
+                         "shows up in the trace (results are "
+                         "byte-identical either way)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="print the telemetry summary table (span "
+                         "walls, counters, gauges) after the run")
     args = ap.parse_args()
+
+    tel = None
+    if args.trace or args.telemetry:
+        exporters = [obs.PerfettoExporter(args.trace)] if args.trace \
+            else []
+        tel = obs.Telemetry(exporters=exporters)
+        obs.set_current(tel)
+    ephemeral_store = None
+    if args.trace and args.store is None:
+        # A pure observer: the store holds noiseless base times, and
+        # cold runs with a store attached are byte-identical to
+        # storeless ones (locked by tests/test_engine_store.py) — so a
+        # throwaway store is a free way to get store-layer spans into
+        # the trace.
+        import tempfile
+        ephemeral_store = tempfile.mkdtemp(prefix="repro-trace-")
+        args.store = f"{ephemeral_store}/trace.evalstore"
 
     if args.space is not None:
         try:
@@ -177,6 +209,24 @@ def main() -> None:
     elif args.rules is not None:
         path = report.write(args.rules)
         print(f"\nfull design-rule report written to {path}")
+
+    if tel is not None:
+        if args.telemetry:
+            print("\n" + tel.summary())
+        if res.telemetry:
+            r_last = res.telemetry[-1]
+            print(f"\ntelemetry: {len(res.telemetry)} driver rounds; "
+                  f"final round {r_last['round']} "
+                  f"(best {r_last['best'] * 1e6:.2f} us, "
+                  f"{r_last['misses']} misses)")
+        tel.close()
+        if args.trace:
+            print(f"trace written to {args.trace} — open it at "
+                  "https://ui.perfetto.dev")
+        obs.set_current(None)
+    if ephemeral_store is not None:
+        import shutil
+        shutil.rmtree(ephemeral_store, ignore_errors=True)
 
     # Roofline context for the fastest train-step schedule.
     if args.space is None:

@@ -30,16 +30,16 @@ from repro.driver.acquisitions import (ACQUISITIONS, AcquisitionFn,
                                        register_acquisition,
                                        resolve_acquisition, ucb)
 from repro.driver.sinks import (SINKS, DatasetSink, Sink,
-                                StreamingHistogram, TraceSink, make_sink,
-                                register_sink)
+                                StreamingHistogram, TelemetrySink,
+                                TraceSink, make_sink, register_sink)
 
 __all__ = [
     "SearchDriver",
     "ACQUISITIONS", "AcquisitionFn", "argmin_topk",
     "expected_improvement", "make_acquisition", "predict_with_std",
     "register_acquisition", "resolve_acquisition", "ucb",
-    "SINKS", "DatasetSink", "Sink", "StreamingHistogram", "TraceSink",
-    "make_sink", "register_sink",
+    "SINKS", "DatasetSink", "Sink", "StreamingHistogram",
+    "TelemetrySink", "TraceSink", "make_sink", "register_sink",
 ]
 
 

@@ -45,8 +45,11 @@ on every analytic backend (locked by the cross-backend tests).
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
+from repro import obs
 from repro.core.costmodel import Machine
 from repro.core.dag import Graph, Schedule
 from repro.driver.acquisitions import AcquisitionFn, resolve_acquisition
@@ -137,6 +140,7 @@ class SearchDriver:
             make_sink(s, self.space) if isinstance(s, str) else s
             for s in sinks]
         self._ran = False
+        self._round = 0       # current round index (spans + sinks agree)
 
     # -- one round's proposal ------------------------------------------
     def _choose(self, ask: int) -> list[Schedule]:
@@ -153,13 +157,18 @@ class SearchDriver:
         s = self.strategy
         if self.acquisition is not None \
                 and isinstance(s, PoolSearchStrategy):
-            pool = s.propose_pool(ask)
+            with obs.span("driver.propose", round=self._round):
+                pool = s.propose_pool(ask)
             if pool is not None:
-                chosen = s.screen(pool, ask, self.acquisition)
+                obs.counter("driver.pool_size").add(len(pool))
+                with obs.span("driver.acquire", round=self._round,
+                              pool=len(pool)):
+                    chosen = s.screen(pool, ask, self.acquisition)
                 # same over-returning clamp as the propose() path: a
                 # screen() that ignores its budget must not overshoot
                 return s.pad(chosen, ask)[:ask]
-        return s.propose(ask)[:ask]
+        with obs.span("driver.propose", round=self._round):
+            return s.propose(ask)[:ask]
 
     # -- the loop -------------------------------------------------------
     def run(self) -> SearchResult:
@@ -194,36 +203,86 @@ class SearchDriver:
         seen: set[bytes] = set()
         n_proposed = 0
         stalled = 0
+        # Telemetry is a pure observer: spans/counters/gauges are never
+        # read back, so the trajectory is byte-identical with a live
+        # registry attached (locked by tests/test_obs.py). The
+        # round-by-round summary lands on SearchResult.telemetry only
+        # when a registry is enabled — the disabled default pays one
+        # flag check per round.
+        tel = obs.current()
+        rounds_tel: "list[dict] | None" = [] if tel.enabled else None
+        best = float("inf")
 
         try:
-            while ((budget is None or n_proposed < budget) and
-                   (sim_budget is None
-                    or ev.fresh_evals() - fresh0 < sim_budget)):
-                ask = batch_size if budget is None else \
-                    min(batch_size, budget - n_proposed)
-                batch = self._choose(ask)
-                if not batch:
-                    break
-                n_proposed += len(batch)
-                batch_fresh0 = ev.fresh_evals()
-                eb = ev.evaluate_batch(batch)
-                fresh = np.zeros(len(eb), dtype=bool)
-                for i, (schedule, key, t) in enumerate(eb):
-                    self.strategy.observe(schedule, float(t))
-                    if key not in seen:
-                        seen.add(key)
-                        fresh[i] = True
-                        schedules.append(schedule)
-                        times.append(float(t))
-                for sink in self.sinks:
-                    sink.consume(eb, fresh)
-                if sim_budget is not None or budget is None:
-                    if ev.fresh_evals() == batch_fresh0:
-                        stalled += len(batch)
-                        if stalled >= stall_limit:
+            with obs.span("driver.run",
+                          strategy=type(self.strategy).__name__,
+                          backend=ev.backend):
+                while ((budget is None or n_proposed < budget) and
+                       (sim_budget is None
+                        or ev.fresh_evals() - fresh0 < sim_budget)):
+                    ask = batch_size if budget is None else \
+                        min(batch_size, budget - n_proposed)
+                    round_span = obs.span("driver.round",
+                                          round=self._round)
+                    round_span.__enter__()
+                    try:
+                        batch = self._choose(ask)
+                        if not batch:
                             break
-                    else:
-                        stalled = 0
+                        n_proposed += len(batch)
+                        batch_fresh0 = ev.fresh_evals()
+                        bh0, bs0, bm0 = (ev.cache_hits, ev.store_hits,
+                                         ev.cache_misses)
+                        ev_t0 = time.perf_counter() if tel.enabled \
+                            else 0.0
+                        with obs.span("driver.evaluate",
+                                      round=self._round, n=len(batch)):
+                            eb = ev.evaluate_batch(batch)
+                        ev_wall = time.perf_counter() - ev_t0 \
+                            if tel.enabled else 0.0
+                        fresh = np.zeros(len(eb), dtype=bool)
+                        with obs.span("driver.observe",
+                                      round=self._round):
+                            for i, (schedule, key, t) in enumerate(eb):
+                                self.strategy.observe(schedule, float(t))
+                                if key not in seen:
+                                    seen.add(key)
+                                    fresh[i] = True
+                                    schedules.append(schedule)
+                                    times.append(float(t))
+                            for sink in self.sinks:
+                                sink.consume(eb, fresh)
+                        n_fresh = int(np.count_nonzero(fresh))
+                        if tel.enabled:
+                            tel.counter("driver.proposed").add(len(batch))
+                            tel.counter("driver.fresh").add(n_fresh)
+                            tel.counter("driver.fresh_evals").add(
+                                ev.fresh_evals() - batch_fresh0)
+                            if len(eb) and float(np.min(eb.times)) < best:
+                                best = float(np.min(eb.times))
+                                tel.gauge("driver.best").set(best)
+                            round_span.set(n=len(batch), n_fresh=n_fresh)
+                            rounds_tel.append({
+                                "round": self._round,
+                                "n": len(batch),
+                                "n_fresh": n_fresh,
+                                "best": best if best < float("inf")
+                                else None,
+                                "evaluate_s": ev_wall,
+                                "memory_hits": ev.cache_hits - bh0,
+                                "store_hits": ev.store_hits - bs0,
+                                "misses": ev.cache_misses - bm0,
+                            })
+                        if sim_budget is not None or budget is None:
+                            if ev.fresh_evals() == batch_fresh0:
+                                stalled += len(batch)
+                                if stalled >= stall_limit:
+                                    break
+                            else:
+                                stalled = 0
+                    finally:
+                        round_span.__exit__(None, None, None)
+                    self._round += 1
         finally:
             if owns_evaluator:
                 ev.close()
@@ -234,4 +293,5 @@ class SearchDriver:
                             cache_hits=ev.cache_hits - hits0,
                             cache_misses=ev.cache_misses - misses0,
                             store_hits=ev.store_hits - store0,
-                            space=self.space)
+                            space=self.space,
+                            telemetry=rounds_tel)

@@ -194,12 +194,14 @@ class DatasetSink:
 class TraceSink:
     """Per-round trace: what was chosen, what was fresh, running best.
 
-    ``rounds[i]`` is a dict with ``keys`` (canonical cache keys of the
-    round's batch, in proposal order), ``n_fresh``, and ``best`` (the
-    minimum time observed up to and including that round). Canonical
-    keys make traces comparable across evaluation backends — the
-    cross-backend determinism tests assert exact equality of the key
-    streams.
+    ``rounds[i]`` is a dict with ``round`` (the 0-based round index —
+    the driver calls each sink exactly once per round, so this is the
+    same numbering the driver's ``driver.round`` telemetry spans
+    carry), ``keys`` (canonical cache keys of the round's batch, in
+    proposal order), ``n_fresh``, and ``best`` (the minimum time
+    observed up to and including that round). Canonical keys make
+    traces comparable across evaluation backends — the cross-backend
+    determinism tests assert exact equality of the key streams.
     """
 
     def __init__(self, graph: "Graph | DesignSpace | None" = None):
@@ -210,14 +212,62 @@ class TraceSink:
         if len(batch):
             self._best = min(self._best, float(np.min(batch.times)))
         self.rounds.append({
+            "round": len(self.rounds),
             "keys": tuple(batch.keys),
             "n_fresh": int(np.count_nonzero(fresh)),
             "best": self._best,
         })
 
-    def key_stream(self) -> tuple:
-        """All chosen canonical keys, round-concatenated (for equality)."""
+    def key_stream(self, rounds: bool = False) -> tuple:
+        """All chosen canonical keys, round-concatenated (for equality).
+
+        The default shape is unchanged (a flat tuple of keys);
+        ``rounds=True`` pairs every key with its round index —
+        ``((round, key), ...)`` — so consumers can line the choice
+        stream up against round-indexed telemetry spans.
+        """
+        if rounds:
+            return tuple((r["round"], k)
+                         for r in self.rounds for k in r["keys"])
         return tuple(k for r in self.rounds for k in r["keys"])
+
+
+class TelemetrySink:
+    """The obs-backed sink: stream per-round markers into the active
+    telemetry registry (:mod:`repro.obs`).
+
+    Emits one ``sink.round`` instant event per consumed batch (with
+    the same 0-based round numbering as :class:`TraceSink` and the
+    driver's ``driver.round`` spans — each sink sees exactly one
+    ``consume`` per round), bumps the ``sink.consumed`` /
+    ``sink.fresh`` counters, and tracks the running best as the
+    ``sink.best`` gauge. Registered as ``"telemetry"`` in
+    :data:`SINKS`, so ``SearchDriver(..., sinks=["telemetry"])`` puts
+    round markers in a trace without any bespoke sink code. A no-op
+    under the disabled default registry.
+    """
+
+    def __init__(self, graph: "Graph | DesignSpace | None" = None):
+        self.n_rounds = 0
+        self._best = float("inf")
+
+    def consume(self, batch: EvalBatch, fresh: np.ndarray) -> None:
+        from repro import obs
+        tel = obs.current()
+        if tel.enabled:
+            n_fresh = int(np.count_nonzero(fresh))
+            if len(batch):
+                self._best = min(self._best,
+                                 float(np.min(batch.times)))
+            tel.event("sink.round", round=self.n_rounds, n=len(batch),
+                      n_fresh=n_fresh,
+                      best=self._best if self._best < float("inf")
+                      else None)
+            tel.counter("sink.consumed").add(len(batch))
+            tel.counter("sink.fresh").add(n_fresh)
+            if self._best < float("inf"):
+                tel.gauge("sink.best").set(self._best)
+        self.n_rounds += 1
 
 
 # -- the registry -------------------------------------------------------------
@@ -233,6 +283,7 @@ def register_sink(name: str, factory: Callable[..., Sink]) -> None:
 
 register_sink("dataset", DatasetSink)
 register_sink("trace", TraceSink)
+register_sink("telemetry", TelemetrySink)
 
 
 def make_sink(sink: str, graph: "Graph | DesignSpace",

@@ -44,6 +44,7 @@ from typing import Iterator, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.costmodel import Machine
 from repro.core.dag import Graph, Schedule
 from repro.engine.store import EvalStore
@@ -217,6 +218,24 @@ class EvaluatorBase:
         stream relabeling (run_search dedup) don't re-canonicalize."""
         if not schedules:
             return []
+        batch_span = obs.span("engine.batch", backend=self.backend,
+                              n=len(schedules))
+        batch_span.__enter__()
+        hits0, store0 = self.cache_hits, self.store_hits
+        misses0 = self.cache_misses
+        try:
+            out = self._evaluate_keyed(schedules)
+        finally:
+            batch_span.set(
+                memory_hits=self.cache_hits - hits0,
+                store_hits=self.store_hits - store0,
+                misses=self.cache_misses - misses0,
+                noise_draws=len(schedules) if self.noise_sigma else 0)
+            batch_span.__exit__(None, None, None)
+        return out
+
+    def _evaluate_keyed(self, schedules: Sequence[Schedule]
+                        ) -> list[tuple[bytes, float]]:
         keys, encoded = self._encode_batch(schedules)
         miss_keys: list[bytes] = []
         miss_rows: list[int] = []
@@ -236,8 +255,10 @@ class EvaluatorBase:
             miss_rows.append(b)
         if miss_rows:
             miss_scheds = [schedules[b] for b in miss_rows]
-            measured = self._measure_batch(miss_scheds,
-                                           encoded[miss_rows])
+            with obs.span("engine.measure", backend=self.backend,
+                          n=len(miss_scheds)):
+                measured = self._measure_batch(miss_scheds,
+                                               encoded[miss_rows])
             if len(measured) != len(miss_scheds):
                 raise RuntimeError(
                     f"{type(self).__name__}._measure_batch returned "

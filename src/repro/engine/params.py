@@ -40,6 +40,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.costmodel import Machine
 from repro.engine.base import EvaluatorBase
 from repro.engine.wallclock import _as_output_map, assert_outputs_close
@@ -110,29 +111,52 @@ class KernelWallclockEvaluator(EvaluatorBase):
         import jax
 
         out: list[float] = []
+        # The compile-vs-gate-vs-timing split per miss batch: gate wall
+        # is accumulated inside whichever phase runs the value check so
+        # the compile/timing spans report pure XLA-compile and pure
+        # stopwatch time. Telemetry is observational only — the
+        # stopwatch readings that become results never include span
+        # bookkeeping (spans wrap whole loops, not timed calls).
+        gate_s = 0.0
+
+        def _gated_check(result, cand):
+            nonlocal gate_s
+            g0 = time.perf_counter()
+            self._check(result, cand)
+            gate_s += time.perf_counter() - g0
+
         try:
             runs = []
-            for cand in candidates:
-                run = self.runner.build(self.space.as_dict(cand))
-                runs.append(run)
-                if self.compile_mode == "batch":
-                    # Compile + gate the whole batch ahead of timing.
-                    result = jax.block_until_ready(run())
-                    if self.check_values:
-                        self._check(result, cand)
-            for cand, run in zip(candidates, runs):
-                if self.compile_mode == "per_candidate":
-                    result = jax.block_until_ready(run())
-                    if self.check_values:
-                        self._check(result, cand)
-                for _ in range(self.warmup - 1):
-                    jax.block_until_ready(run())
-                times = []
-                for _ in range(self.repeats):
-                    t0 = time.perf_counter()
-                    jax.block_until_ready(run())
-                    times.append(time.perf_counter() - t0)
-                out.append(statistics.median(times))
+            with obs.span("kernel.compile", n=len(candidates),
+                          mode=self.compile_mode) as compile_span:
+                for cand in candidates:
+                    run = self.runner.build(self.space.as_dict(cand))
+                    runs.append(run)
+                    if self.compile_mode == "batch":
+                        # Compile + gate the whole batch ahead of timing.
+                        result = jax.block_until_ready(run())
+                        if self.check_values:
+                            _gated_check(result, cand)
+                compile_span.set(gate_s=gate_s)
+            compile_gate_s = gate_s
+            with obs.span("kernel.timing", n=len(candidates),
+                          repeats=self.repeats) as timing_span:
+                for cand, run in zip(candidates, runs):
+                    if self.compile_mode == "per_candidate":
+                        result = jax.block_until_ready(run())
+                        if self.check_values:
+                            _gated_check(result, cand)
+                    for _ in range(self.warmup - 1):
+                        jax.block_until_ready(run())
+                    times = []
+                    for _ in range(self.repeats):
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(run())
+                        times.append(time.perf_counter() - t0)
+                    out.append(statistics.median(times))
+                timing_span.set(gate_s=gate_s - compile_gate_s)
+            if self.check_values:
+                obs.counter("kernel.gate_checks").add(len(candidates))
         finally:
             # Same salvage contract as the executor backend: if a
             # candidate fails the value gate mid-batch, the timings

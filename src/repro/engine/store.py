@@ -44,9 +44,11 @@ from __future__ import annotations
 import hashlib
 import os
 import struct
+import time
 import zlib
 from typing import Iterable
 
+from repro import obs
 from repro.core.costmodel import Machine
 from repro.core.dag import Graph
 
@@ -104,22 +106,38 @@ class EvalStore:
         self._mem: dict[bytes, dict[bytes, float]] = {}
         self.n_records = 0
         self.n_truncated_bytes = 0
+        # read/append accounting (surfaced by stats() and telemetry):
+        self.n_bytes_read = 0          # file bytes parsed at open
+        self.n_records_appended = 0    # records this handle wrote
+        self.n_bytes_appended = 0      # bytes this handle wrote
+        self.n_lookups = 0             # get() calls
+        self.n_lookup_hits = 0         # get() calls that found a time
+        self.lookup_seconds = 0.0      # wall inside get()
+        self.append_seconds = 0.0      # wall inside put_many()
         parent = os.path.dirname(self.path)
         if parent:
             os.makedirs(parent, exist_ok=True)
         self._fd: int | None = os.open(
             self.path, os.O_RDWR | os.O_CREAT | os.O_APPEND, 0o644)
         try:
-            self._load()
+            with obs.span("store.open", path=self.path) as sp:
+                self._load()
+                sp.set(records=self.n_records,
+                       truncated_bytes=self.n_truncated_bytes)
         except Exception:
             os.close(self._fd)
             self._fd = None
             raise
+        if self.n_truncated_bytes:
+            obs.event("store.truncated_tail", path=self.path,
+                      bytes=self.n_truncated_bytes)
+            obs.counter("store.truncated_tails").add(1)
 
     # -- load / recovery ---------------------------------------------------
     def _load(self) -> None:
         size = os.fstat(self._fd).st_size
         data = os.pread(self._fd, size, 0) if size else b""
+        self.n_bytes_read = len(data)
         if not data:
             os.write(self._fd, MAGIC)
             return
@@ -152,8 +170,14 @@ class EvalStore:
     # -- lookups -----------------------------------------------------------
     def get(self, fingerprint: bytes, key: bytes) -> float | None:
         """The stored base time, or ``None`` if never measured."""
+        t0 = time.perf_counter()
         bucket = self._mem.get(fingerprint)
-        return None if bucket is None else bucket.get(key)
+        out = None if bucket is None else bucket.get(key)
+        self.lookup_seconds += time.perf_counter() - t0
+        self.n_lookups += 1
+        if out is not None:
+            self.n_lookup_hits += 1
+        return out
 
     def __len__(self) -> int:
         return sum(len(b) for b in self._mem.values())
@@ -166,12 +190,31 @@ class EvalStore:
         return list(self._mem)
 
     def stats(self) -> dict:
+        """Traffic + recovery meter for this handle.
+
+        Load-side: ``records_loaded`` / ``bytes_read`` (parsed at
+        open) and ``truncated_bytes`` (corrupt tail dropped, 0 on a
+        clean file). Write-side: ``records_appended`` /
+        ``bytes_appended`` by this handle. Lookup-side: ``lookups`` /
+        ``lookup_hits`` — on a warm run these mirror the evaluator's
+        ``store_hits`` meter one-for-one (each distinct uncached key is
+        looked up exactly once; parity locked by tests/test_obs.py) —
+        plus the accumulated ``lookup_seconds`` / ``append_seconds``
+        walls.
+        """
         return {
             "path": self.path,
             "entries": len(self),
             "fingerprints": len(self._mem),
             "records_loaded": self.n_records,
             "truncated_bytes": self.n_truncated_bytes,
+            "bytes_read": self.n_bytes_read,
+            "records_appended": self.n_records_appended,
+            "bytes_appended": self.n_bytes_appended,
+            "lookups": self.n_lookups,
+            "lookup_hits": self.n_lookup_hits,
+            "lookup_seconds": self.lookup_seconds,
+            "append_seconds": self.append_seconds,
         }
 
     # -- writes ------------------------------------------------------------
@@ -188,6 +231,7 @@ class EvalStore:
         if len(fingerprint) != FINGERPRINT_SIZE:
             raise ValueError(
                 f"fingerprint must be {FINGERPRINT_SIZE} bytes")
+        t0 = time.perf_counter()
         bucket = self._mem.setdefault(fingerprint, {})
         buf = bytearray()
         n_new = 0
@@ -202,8 +246,13 @@ class EvalStore:
             buf += _LEN.pack(zlib.crc32(payload))
             n_new += 1
         if buf:
-            os.write(self._fd, bytes(buf))
+            with obs.span("store.append", records=n_new,
+                          bytes=len(buf)):
+                os.write(self._fd, bytes(buf))
             self.n_records += n_new
+            self.n_records_appended += n_new
+            self.n_bytes_appended += len(buf)
+        self.append_seconds += time.perf_counter() - t0
         return n_new
 
     def put(self, fingerprint: bytes, key: bytes, t: float) -> int:

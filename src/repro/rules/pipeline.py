@@ -37,6 +37,7 @@ from typing import Callable, Sequence, TYPE_CHECKING
 
 import numpy as np
 
+from repro import obs
 from repro.core.features import FeatureMatrix
 from repro.rules.labels import Labeling, label_times
 from repro.rules.rulesets import (RuleSet, annotate_vs_canonical,
@@ -176,13 +177,30 @@ def distill(result: "SearchResult",
     label, tree, and rules stages still scale with the whole corpus.
     """
     stage_seconds: dict[str, float] = {}
+    distill_span = obs.span("rules.distill",
+                            n_schedules=len(result.schedules))
+    distill_span.__enter__()
 
     def staged(name, fn):
-        t0 = time.perf_counter()
-        out = fn()
-        stage_seconds[name] = time.perf_counter() - t0
+        # Each stage is both a rules.<stage> telemetry span and a
+        # stage_seconds entry (the pre-obs consumers — benchmark rows,
+        # the streaming-distill test — read the dict).
+        with obs.span(f"rules.{name}"):
+            t0 = time.perf_counter()
+            out = fn()
+            stage_seconds[name] = time.perf_counter() - t0
         return out
 
+    try:
+        return _distill_staged(result, labeler, canonical, full_space,
+                               range_widen, initial_leaves, features,
+                               staged, stage_seconds)
+    finally:
+        distill_span.__exit__(None, None, None)
+
+
+def _distill_staged(result, labeler, canonical, full_space, range_widen,
+                    initial_leaves, features, staged, stage_seconds):
     times = np.asarray(result.times, dtype=np.float64)
     labeling = staged("label", lambda: labeler(times))
     if features is not None:

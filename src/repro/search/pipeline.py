@@ -66,6 +66,14 @@ class SearchResult:
     # (repro.engine.store) instead of a paid measurement; 0 storeless.
     store_hits: int = 0
     space: DesignSpace | None = None
+    # Round-by-round telemetry summary (repro.obs): one dict per driver
+    # round — {round, n, n_fresh, best, evaluate_s, memory_hits,
+    # store_hits, misses} — filled only when a telemetry registry is
+    # enabled during the run, None otherwise. Purely observational:
+    # never part of the byte-identity contract, and the per-round
+    # latency/hit-ratio signal the cost-aware acquisition work
+    # consumes.
+    telemetry: "list[dict] | None" = None
 
     def design_space(self) -> DesignSpace:
         """The searched space (wrapping ``graph`` when not recorded)."""
