@@ -211,7 +211,108 @@ def run_autotune_smoke(store_path: str | None = None) -> dict:
     return out
 
 
-def main() -> None:
+def _ooc_child(mode: str, n_rows: int, d: int, block: int,
+               headroom_mb: int) -> None:
+    """Subprocess body of :func:`run_ooc_smoke`: fit one tree under a
+    hard ``RLIMIT_AS`` address-space ceiling.
+
+    The ceiling is self-calibrated — current VmSize (read from
+    ``/proc/self/statm`` *after* the imports) plus ``headroom_mb`` —
+    so it bounds what the training pass itself may allocate,
+    independent of the interpreter's baseline footprint.
+    """
+    import resource
+
+    import numpy as np
+
+    from repro.rules.trees import fit_from_histograms
+
+    def blocks():
+        rng = np.random.default_rng(0)
+        for lo in range(0, n_rows, block):
+            m = min(block, n_rows - lo)
+            yield (rng.random((m, d)) < 0.5).astype(np.int8)
+
+    y = np.empty(n_rows, dtype=np.int64)
+    lo = 0
+    for X in blocks():
+        y[lo:lo + len(X)] = (X[:, 0] * 4 + X[:, 1] * 2 + X[:, 2]) % 3
+        lo += len(X)
+
+    with open("/proc/self/statm") as fh:
+        vm = int(fh.read().split()[0]) * resource.getpagesize()
+    limit = vm + headroom_mb * (1 << 20)
+    resource.setrlimit(resource.RLIMIT_AS, (limit, limit))
+    try:
+        if mode == "ooc":
+            tree = fit_from_histograms(blocks, y, max_leaf_nodes=8,
+                                       max_depth=7)
+        else:
+            X = np.concatenate(list(blocks()))
+            tree = R.DecisionTree(8, 7).fit(X, y)
+    except MemoryError:
+        print("RESULT memoryerror")
+        return
+    print(f"RESULT ok leaves={tree.n_leaves()}")
+
+
+def run_ooc_smoke(n_rows: int = 60_000, d: int = 192,
+                  block: int = 4096, headroom_mb: int = 160) -> dict:
+    """Out-of-core distillation under a hard memory ceiling.
+
+    Two subprocesses fit the same ``max_leaf_nodes=8`` tree on the
+    same synthetic ``n_rows x d`` 0/1 corpus with ``RLIMIT_AS`` capped
+    at (post-import VmSize + ``headroom_mb``). The histogram path must
+    finish inside the cap; the dense path — the float64 matrix alone
+    is ~``n_rows * d * 8`` bytes, before the presort — must hit
+    ``MemoryError``. At the defaults the dense fit needs >250 MB
+    against a 160 MB allowance while the out-of-core pass peaks near
+    27 MB regardless of row count, so the gate fails loudly if either
+    path's memory behavior regresses.
+    """
+    import os
+    import subprocess
+    import sys
+
+    here = os.path.abspath(__file__)
+    src = os.path.join(os.path.dirname(os.path.dirname(here)), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    # Single-threaded BLAS/OpenMP: thread stacks reserve address space
+    # that would eat unpredictable chunks of the RLIMIT_AS allowance.
+    env["OMP_NUM_THREADS"] = "1"
+    env["OPENBLAS_NUM_THREADS"] = "1"
+    out: dict = {}
+    for mode in ("ooc", "dense"):
+        t0 = time.perf_counter()
+        proc = subprocess.run(
+            [sys.executable, here, "--ooc-child", mode, str(n_rows),
+             str(d), str(block), str(headroom_mb)],
+            capture_output=True, text=True, env=env, timeout=600)
+        out[mode] = {
+            "ok": proc.returncode == 0 and "RESULT ok" in proc.stdout,
+            "memory_error": "RESULT memoryerror" in proc.stdout
+            or "MemoryError" in proc.stderr,
+            "wall_s": time.perf_counter() - t0,
+        }
+    out["ooc_ok"] = out["ooc"]["ok"]
+    out["dense_ok"] = out["dense"]["ok"]
+    assert out["ooc_ok"], \
+        "out-of-core fit exceeded the memory ceiling it is built to hold"
+    assert not out["dense_ok"] and out["dense"]["memory_error"], \
+        "dense fit passed under a ceiling sized to be impossible — " \
+        "the gate is no longer binding"
+    return out
+
+
+def main(argv: list[str] | None = None) -> None:
+    import sys
+
+    argv = sys.argv[1:] if argv is None else argv
+    if argv[:1] == ["--ooc-child"]:
+        _ooc_child(argv[1], int(argv[2]), int(argv[3]), int(argv[4]),
+                   int(argv[5]))
+        return
     out = run_smoke()
     for k, v in out.items():
         print(f"smoke_{k}: {v}")
@@ -219,6 +320,8 @@ def main() -> None:
         print(f"smoke_backend_{backend}: {v}")
     for k, v in run_autotune_smoke().items():
         print(f"smoke_autotune_{k}: {v}")
+    for k, v in run_ooc_smoke().items():
+        print(f"smoke_ooc_{k}: {v}")
 
 
 if __name__ == "__main__":

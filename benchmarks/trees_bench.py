@@ -110,6 +110,118 @@ def tree_train_benches() -> list[str]:
     ]
 
 
+def _synthetic_blocks(n_rows: int, d: int, block: int, seed: int = 0):
+    """Re-callable block stream of a synthetic 0/1 corpus.
+
+    Each call replays the same rows (fresh generator, fixed seed)
+    without ever holding more than one ``(block, d)`` slab — exactly
+    the shape a :class:`repro.driver.HistogramSink` streams, so the
+    OOC peak-memory rows measure the training pass, not the fixture.
+    """
+    def blocks():
+        rng = np.random.default_rng(seed)
+        for lo in range(0, n_rows, block):
+            m = min(block, n_rows - lo)
+            yield (rng.random((m, d)) < 0.5).astype(np.int8)
+    return blocks
+
+
+def _synthetic_labels(n_rows: int, d: int, block: int,
+                      seed: int = 0) -> np.ndarray:
+    y = np.empty(n_rows, dtype=np.int64)
+    lo = 0
+    for X in _synthetic_blocks(n_rows, d, block, seed)():
+        y[lo:lo + len(X)] = (X[:, 0] * 4 + X[:, 1] * 2 + X[:, 2]) % 3
+        lo += len(X)
+    return y
+
+
+def ooc_distill_benches() -> list[str]:
+    """Out-of-core vs dense tree training: time and peak memory.
+
+    The headline row is ``distill_ooc_peak_mb`` — the histogram path's
+    peak traced allocation at 100k rows, which must stay flat as the
+    corpus grows (its ``derived`` column shows the 20k-row peak and
+    the 100k/20k ratio). The dense rows materialize the matrix and pay
+    the presort, so their peak scales with rows.
+    """
+    import tracemalloc
+    from repro.rules.trees import fit_from_histograms
+
+    D, BLOCK, MLN = 192, 4096, 8
+    rows: list[str] = []
+
+    n_small = 20_000
+    Xd = np.concatenate(list(_synthetic_blocks(n_small, D, BLOCK)()))
+    y_small = _synthetic_labels(n_small, D, BLOCK)
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    dense = R.DecisionTree(MLN, MLN - 1).fit(Xd, y_small)
+    dense_t = time.perf_counter() - t0
+    _, dense_peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    del Xd
+
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    ooc_small = fit_from_histograms(_synthetic_blocks(n_small, D, BLOCK),
+                                    y_small, max_leaf_nodes=MLN,
+                                    max_depth=MLN - 1)
+    ooc_small_t = time.perf_counter() - t0
+    _, ooc_small_peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+
+    n_big = 100_000
+    y_big = _synthetic_labels(n_big, D, BLOCK)
+    tracemalloc.start()
+    t0 = time.perf_counter()
+    fit_from_histograms(_synthetic_blocks(n_big, D, BLOCK), y_big,
+                        max_leaf_nodes=MLN, max_depth=MLN - 1)
+    ooc_big_t = time.perf_counter() - t0
+    _, ooc_big_peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+
+    sig = []
+    stack = [dense.root]
+    while stack:
+        nd = stack.pop()
+        if nd.is_leaf:
+            sig.append(("leaf", nd.n_samples, nd.majority_class()))
+        else:
+            sig.append((nd.feature, nd.threshold))
+            stack += [nd.right, nd.left]
+    sig2 = []
+    stack = [ooc_small.root]
+    while stack:
+        nd = stack.pop()
+        if nd.is_leaf:
+            sig2.append(("leaf", nd.n_samples, nd.majority_class()))
+        else:
+            sig2.append((nd.feature, nd.threshold))
+            stack += [nd.right, nd.left]
+
+    mb = 1.0 / (1024 * 1024)
+    rows += [
+        f"distill_dense_time_20k,{dense_t * 1e6:.2f},"
+        f"{dense_t * 1e3:.1f}ms",
+        f"distill_dense_peak_mb,{dense_peak * mb * 1e3:.2f},"
+        f"{dense_peak * mb:.1f}MB_at_20k_rows",
+        f"distill_ooc_time,{ooc_small_t * 1e6:.2f},"
+        f"{ooc_small_t * 1e3:.1f}ms_at_20k_rows",
+        f"distill_ooc_time_100k,{ooc_big_t * 1e6:.2f},"
+        f"{ooc_big_t * 1e3:.1f}ms",
+        # us_per_call column carries the gated quantity: peak bytes at
+        # 100k rows (scaled), which must NOT scale with the corpus.
+        f"distill_ooc_peak_mb,{ooc_big_peak * mb * 1e3:.2f},"
+        f"{ooc_small_peak * mb:.1f}MB_at_20k_"
+        f"{ooc_big_peak * mb:.1f}MB_at_100k_"
+        f"ratio_{ooc_big_peak / max(1, ooc_small_peak):.2f}",
+        f"distill_ooc_identical,{ooc_small_t * 1e6:.2f},"
+        f"{sig == sig2}",
+    ]
+    return rows
+
+
 def surrogate_screen_benches() -> list[str]:
     rows = []
     quality = {}
@@ -140,7 +252,8 @@ def surrogate_screen_benches() -> list[str]:
 
 
 def trees_benches() -> list[str]:
-    return tree_train_benches() + surrogate_screen_benches()
+    return (tree_train_benches() + ooc_distill_benches()
+            + surrogate_screen_benches())
 
 
 if __name__ == "__main__":

@@ -12,7 +12,9 @@ evaluation and :mod:`repro.rules` extracted distillation:
   ``expected_improvement``; uncertainty via ``predict_with_std``.
 * :data:`SINKS` (:mod:`repro.driver.sinks`) — streaming consumers of
   evaluated batches: ``dataset`` (incremental featurization +
-  histogram for streaming distillation), ``trace`` (per-round choice
+  histogram for streaming distillation), ``histogram`` (out-of-core:
+  compact encodings + count histograms, distills without ever
+  materializing the feature matrix), ``trace`` (per-round choice
   stream).
 
 See README.md in this package for the round lifecycle, the registry
@@ -29,17 +31,19 @@ from repro.driver.acquisitions import (ACQUISITIONS, AcquisitionFn,
                                        make_acquisition, predict_with_std,
                                        register_acquisition,
                                        resolve_acquisition, ucb)
-from repro.driver.sinks import (SINKS, DatasetSink, Sink,
-                                StreamingHistogram, TelemetrySink,
-                                TraceSink, make_sink, register_sink)
+from repro.driver.sinks import (SINKS, DatasetSink, HistogramSink,
+                                Sink, StreamingHistogram,
+                                TelemetrySink, TraceSink, make_sink,
+                                register_sink)
 
 __all__ = [
     "SearchDriver",
     "ACQUISITIONS", "AcquisitionFn", "argmin_topk",
     "expected_improvement", "make_acquisition", "predict_with_std",
     "register_acquisition", "resolve_acquisition", "ucb",
-    "SINKS", "DatasetSink", "Sink", "StreamingHistogram",
-    "TelemetrySink", "TraceSink", "make_sink", "register_sink",
+    "SINKS", "DatasetSink", "HistogramSink", "Sink",
+    "StreamingHistogram", "TelemetrySink", "TraceSink", "make_sink",
+    "register_sink",
 ]
 
 

@@ -18,9 +18,14 @@ already folded.
     computes from scratch — byte-identical, locked by test — and
     ``distill()`` hands the streamed matrix straight to
     :func:`repro.rules.distill` (``features=``), skipping the
-    re-featurization pass entirely. The doubling histogram is the seed
-    of the ROADMAP's out-of-core distillation path: label/split
-    statistics folded per batch instead of recomputed per corpus.
+    re-featurization pass entirely.
+
+``histogram`` — :class:`HistogramSink`
+    The out-of-core variant: stores only compact canonical encodings
+    and folded count histograms — never a ``(rows x features)``
+    matrix — and ``distill()`` trains the design-rule tree blockwise
+    through :class:`repro.rules.trees.HistogramGrower`, bit-identical
+    to the in-memory path. Sinks from sharded hosts ``merge()``.
 
 ``trace`` — :class:`TraceSink`
     Records one row per driver round (canonical keys chosen, fresh
@@ -38,6 +43,7 @@ within the driver run (the same dedup that builds
 """
 from __future__ import annotations
 
+import math
 from typing import Callable, Protocol, runtime_checkable
 
 import numpy as np
@@ -69,6 +75,14 @@ class StreamingHistogram:
     the label-histogram seed for out-of-core distillation: class
     boundaries can be estimated from the folded counts without holding
     every observation.
+
+    ``hi`` is always a power of two (the smallest strictly above the
+    largest value seen), so it is a pure function of that maximum —
+    independent of batch order or sharding — and any two histograms'
+    ranges nest by exact doublings. That is what makes :meth:`merge`
+    associative, commutative, and bin-for-bin equal to single-stream
+    ``add`` of the concatenated observations (hypothesis-locked in
+    tests/test_histogram_trees.py).
     """
 
     def __init__(self, half_bins: int = 128):
@@ -86,7 +100,10 @@ class StreamingHistogram:
             raise ValueError("times must be non-negative")
         vmax = float(v.max())
         if self.hi == 0.0:
-            self.hi = vmax * 2.0 if vmax > 0.0 else 1.0
+            # Smallest power of two strictly above vmax (frexp gives
+            # vmax = m * 2**e with m in [0.5, 1), so 2**e > vmax).
+            self.hi = math.ldexp(1.0, math.frexp(vmax)[1]) \
+                if vmax > 0.0 else 1.0
         while vmax >= self.hi:
             # Doubling merges adjacent bin pairs: counts are preserved
             # exactly, and because the doubled edges coincide with
@@ -116,6 +133,110 @@ class StreamingHistogram:
         """Bin edges, ``np.histogram`` convention (n_bins + 1 values)."""
         return np.linspace(0.0, self.hi, self.n_bins + 1)
 
+    def _rebin(self, counts: np.ndarray, hi: float,
+               target: float) -> np.ndarray:
+        """Counts rebinned to a larger power-of-two range (exact —
+        each doubling merges adjacent pairs, see :meth:`add`)."""
+        counts = counts.copy()
+        while hi < target:
+            counts = counts[0::2] + counts[1::2]
+            counts = np.concatenate(
+                [counts, np.zeros(self.n_bins // 2, np.int64)])
+            hi *= 2.0
+        if hi != target:
+            raise ValueError(
+                f"ranges do not nest: hi={hi} vs target={target}")
+        return counts
+
+    def merge(self, other: "StreamingHistogram") -> "StreamingHistogram":
+        """Fold another histogram in (sharded hosts; in place).
+
+        Both ranges double up to the larger one and the counts add —
+        exactly the histogram single-stream ``add`` of both hosts'
+        observations would have produced, in any merge order, because
+        ``hi`` is a power-of-two function of the maximum value seen.
+        """
+        if not isinstance(other, StreamingHistogram):
+            raise TypeError(f"expected StreamingHistogram, got "
+                            f"{type(other).__name__}")
+        if other.n_bins != self.n_bins:
+            raise ValueError(
+                f"cannot merge {other.n_bins}-bin histogram into "
+                f"{self.n_bins}-bin histogram")
+        if other.hi == 0.0:
+            return self
+        if self.hi == 0.0:
+            self.hi = other.hi
+            self.counts = other.counts.copy()
+            return self
+        target = max(self.hi, other.hi)
+        self.counts = (self._rebin(self.counts, self.hi, target)
+                       + other._rebin(other.counts, other.hi, target))
+        self.hi = target
+        return self
+
+
+class _CanonicalKeySet:
+    """Vectorized sink-lifetime dedup over canonical cache keys.
+
+    Keys are fixed-width byte strings (canonical encoding rows), so
+    membership is numpy ``S``-dtype array work instead of a Python set
+    probe per element: the seen set is one sorted array (searchsorted
+    membership) plus small unsorted pending chunks (``np.isin``),
+    compacted geometrically so the amortized cost per batch stays
+    O(batch · log seen).
+    """
+
+    def __init__(self):
+        self._sorted: np.ndarray | None = None     # sorted S-dtype keys
+        self._pending: list[np.ndarray] = []       # recent, unsorted
+        self._n_pending = 0
+
+    def __len__(self) -> int:
+        n = 0 if self._sorted is None else self._sorted.size
+        return n + self._n_pending
+
+    def _compact(self) -> None:
+        parts = ([] if self._sorted is None else [self._sorted]) \
+            + self._pending
+        self._sorted = np.sort(np.concatenate(parts))
+        self._pending = []
+        self._n_pending = 0
+
+    def filter_new(self, keys, fresh: np.ndarray) -> np.ndarray:
+        """Indices of ``keys`` that are fresh, unseen, and first within
+        the batch (first-appearance order), then marks them seen."""
+        arr = np.asarray(keys, dtype=np.bytes_)
+        if arr.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        if self._sorted is not None \
+                and arr.dtype.itemsize != self._sorted.dtype.itemsize:
+            raise ValueError(
+                f"canonical keys must be fixed-width: got "
+                f"{arr.dtype} vs seen {self._sorted.dtype}")
+        new = np.asarray(fresh, dtype=bool).copy()
+        if self._sorted is not None and self._sorted.size:
+            pos = np.searchsorted(self._sorted, arr)
+            pos_c = np.minimum(pos, self._sorted.size - 1)
+            new &= self._sorted[pos_c] != arr
+        for chunk in self._pending:
+            new &= ~np.isin(arr, chunk)
+        # First occurrence within the batch: the driver's fresh mask
+        # already dedups within a run, but a sink fed raw keys (merge)
+        # must not admit an intra-batch duplicate twice.
+        _, first = np.unique(arr, return_index=True)
+        keep = np.zeros(arr.size, dtype=bool)
+        keep[first] = True
+        new &= keep
+        idx = np.flatnonzero(new)
+        if idx.size:
+            self._pending.append(arr[idx])
+            self._n_pending += idx.size
+            n_sorted = 0 if self._sorted is None else self._sorted.size
+            if self._n_pending * 4 >= max(n_sorted, 256):
+                self._compact()
+        return idx
+
 
 class DatasetSink:
     """Incremental ``(features, labels, times)`` accumulator.
@@ -135,7 +256,9 @@ class DatasetSink:
         self.times: list[float] = []
         self.histogram = StreamingHistogram(half_bins=half_bins)
         self.n_consumed = 0                # every evaluation, dups too
-        self._seen: set[bytes] = set()     # sink-lifetime dedup
+        self._seen = _CanonicalKeySet()    # sink-lifetime dedup
+        self._matrix_cache: FeatureMatrix | None = None
+        self._matrix_rows = -1
 
     def consume(self, batch: EvalBatch, fresh: np.ndarray) -> None:
         self.n_consumed += len(batch)
@@ -143,11 +266,10 @@ class DatasetSink:
         # canonical-key set so one sink fed by several runs (e.g. over
         # a shared memoized evaluator) still holds each implementation
         # exactly once.
-        idx = [i for i, (k, f) in enumerate(zip(batch.keys, fresh))
-               if f and k not in self._seen]
-        if not idx:
+        idx = self._seen.filter_new(batch.keys, fresh)
+        if idx.size == 0:
             return
-        self._seen.update(batch.keys[i] for i in idx)
+        self._matrix_cache = None
         new = [batch.schedules[i] for i in idx]
         self.basis.add(new)
         self.schedules.extend(new)
@@ -165,14 +287,22 @@ class DatasetSink:
         Same contract as :func:`repro.core.features.featurize`
         (including :class:`DegenerateFeatureSpaceError` on a corpus
         with no discriminating features) — but the expansion work was
-        already paid batch by batch.
+        already paid batch by batch, and the pruning pass is cached
+        per corpus length (``distill()`` then ``dataset()`` on an
+        unchanged corpus prunes once, not twice; ``consume``
+        invalidates).
         """
+        if self._matrix_cache is not None \
+                and self._matrix_rows == len(self.schedules):
+            return self._matrix_cache
         fm = self.basis.matrix()
         if not fm.features:
             raise DegenerateFeatureSpaceError(
                 f"streamed corpus of {len(self.schedules)} schedule(s) "
                 "has no discriminating features after constant-column "
                 "pruning; at least 2 distinct schedules are required")
+        self._matrix_cache = fm
+        self._matrix_rows = len(self.schedules)
         return fm
 
     def dataset(self):
@@ -189,6 +319,170 @@ class DatasetSink:
         """
         from repro.rules.pipeline import distill
         return distill(self, features=self.matrix(), **kwargs)
+
+
+class HistogramSink:
+    """Out-of-core corpus accumulator: compact encodings + count
+    histograms, never a ``(rows x features)`` matrix.
+
+    The scale unlock of the ROADMAP's out-of-core distillation item.
+    Per fresh (first-seen canonical) evaluation the sink stores only
+    the canonical int32 encoding row (the cache-key bytes
+    reinterpreted — ``(2, N)`` order/stream form for schedule spaces,
+    value indices for parameter grids), the observed time, and folds
+    the time into the :class:`StreamingHistogram`; the item universe
+    that names candidate features is tracked names-only through the
+    space's ``feature_universe()``. Memory is O(rows x encoding) +
+    O(features) — for the paper's spaces roughly 50x under the dense
+    feature matrix — and :meth:`distill` runs the labels->tree pass
+    blockwise in O(features x bins) extra memory via
+    :class:`repro.rules.trees.HistogramGrower`, producing the same
+    report bit for bit.
+
+    The sink doubles as the corpus handle ``repro.rules.distill``
+    consumes through its ``histograms=`` seam: ``n_rows`` /
+    ``times`` / ``feature_list()`` / ``value_grids()`` / ``blocks()``.
+    Blocks are decoded (``decode_batch``) and featurized
+    (``apply_features``) on the fly, ``block_rows`` rows at a time —
+    every tree level re-pays that featurization, which is the
+    memory/CPU trade the out-of-core path makes. :meth:`merge` folds
+    another host's sink in (sharded search), with the same
+    first-appearance dedup the driver applies.
+    """
+
+    def __init__(self, graph: "Graph | DesignSpace",
+                 half_bins: int = 128, block_rows: int = 4096):
+        if block_rows < 1:
+            raise ValueError("block_rows must be >= 1")
+        self.space = as_space(graph)
+        self.graph = getattr(self.space, "graph", None)
+        self.universe = self.space.feature_universe()
+        self.block_rows = int(block_rows)
+        self.times: list[float] = []
+        self.histogram = StreamingHistogram(half_bins=half_bins)
+        self.n_consumed = 0
+        self._seen = _CanonicalKeySet()
+        self._rows: list[np.ndarray] = []  # flat int32 canonical rows
+        self._pruned: tuple[list, list[np.ndarray]] | None = None
+        self._pruned_rows = -1
+
+    def consume(self, batch: EvalBatch, fresh: np.ndarray) -> None:
+        self.n_consumed += len(batch)
+        idx = self._seen.filter_new(batch.keys, fresh)
+        if idx.size == 0:
+            return
+        enc = [np.frombuffer(batch.keys[i], dtype=np.int32)
+               for i in idx]
+        # Universe names come from the *decoded* canonical candidates,
+        # so stored rows and candidate features stay consistent even if
+        # a caller ever feeds non-canonical schedules.
+        self.universe.add(self.space.decode_batch(np.stack(enc)))
+        self._rows.extend(enc)
+        t_new = np.asarray(batch.times)[idx]
+        self.times.extend(float(t) for t in t_new)
+        self.histogram.add(t_new)
+        self._pruned = None
+
+    # -- the streamed corpus (the ``histograms=`` protocol) ---------------
+    @property
+    def n_rows(self) -> int:
+        return len(self._rows)
+
+    def times_array(self) -> np.ndarray:
+        return np.asarray(self.times, dtype=np.float64)
+
+    def _encoded_blocks(self):
+        for lo in range(0, len(self._rows), self.block_rows):
+            yield np.stack(self._rows[lo:lo + self.block_rows])
+
+    def _discover(self) -> tuple[list, list[np.ndarray]]:
+        """(pruned features, per-feature value grids), cached per corpus
+        length: one blockwise min/max fold over the candidate features
+        replaces ``FeatureBasis.matrix()``'s in-memory pruning."""
+        if self._pruned is not None \
+                and self._pruned_rows == len(self._rows):
+            return self._pruned
+        cands = self.universe.candidate_features()
+        lo = hi = None
+        for enc in self._encoded_blocks():
+            X = self.space.apply_features(
+                self.space.decode_batch(enc), cands)
+            if X.size and (X.min() < 0 or X.max() > 1):
+                raise ValueError(
+                    "histogram sinks require binary 0/1 features")
+            bl, bh = X.min(axis=0), X.max(axis=0)
+            lo = bl if lo is None else np.minimum(lo, bl)
+            hi = bh if hi is None else np.maximum(hi, bh)
+        keep = np.flatnonzero(lo != hi) if lo is not None \
+            else np.zeros(0, dtype=np.int64)
+        if keep.size == 0:
+            raise DegenerateFeatureSpaceError(
+                f"streamed corpus of {len(self._rows)} "
+                "implementation(s) has no discriminating features "
+                "after constant-column pruning; at least 2 distinct "
+                "candidates are required")
+        feats = [cands[j] for j in keep]
+        grids = [np.array([0.0, 1.0]) for _ in feats]
+        self._pruned = (feats, grids)
+        self._pruned_rows = len(self._rows)
+        return self._pruned
+
+    def feature_list(self) -> list:
+        """Pruned candidate features — matches what
+        ``DatasetSink.matrix().features`` lists on an equal corpus."""
+        return self._discover()[0]
+
+    def value_grids(self) -> list[np.ndarray]:
+        """Per-feature value grids for :class:`~repro.rules.trees.
+        ClassCountHistogram` (binary 0/1 indicators here)."""
+        return self._discover()[1]
+
+    def blocks(self):
+        """Feature blocks (int8, ``block_rows`` rows each) over the
+        pruned features — decoded and featurized on the fly."""
+        feats, _ = self._discover()
+        for enc in self._encoded_blocks():
+            yield self.space.apply_features(
+                self.space.decode_batch(enc), feats)
+
+    def distill(self, **kwargs):
+        """:func:`repro.rules.distill` on the streamed corpus, through
+        the out-of-core ``histograms=`` seam — the feature matrix is
+        never materialized."""
+        from repro.rules.pipeline import distill
+        return distill(self, histograms=self, **kwargs)
+
+    def merge(self, other: "HistogramSink") -> "HistogramSink":
+        """Fold another host's streamed corpus in (in place).
+
+        First-appearance dedup against ``self``: only times of rows
+        unseen here fold into the doubling histogram, so the merged
+        sink equals one sink that consumed both hosts' batches in
+        sequence. ``StreamingHistogram.merge`` stays for genuinely
+        disjoint shards; here overlap must not double-count.
+        """
+        if not isinstance(other, HistogramSink):
+            raise TypeError(f"expected HistogramSink, got "
+                            f"{type(other).__name__}")
+        if self.space.name != other.space.name:
+            raise ValueError(
+                f"cannot merge sink over {other.space.name!r} into "
+                f"sink over {self.space.name!r}")
+        self.n_consumed += other.n_consumed
+        if not other._rows:
+            return self
+        keys = [r.tobytes() for r in other._rows]
+        idx = self._seen.filter_new(keys,
+                                    np.ones(len(keys), dtype=bool))
+        if idx.size:
+            enc = [other._rows[i] for i in idx]
+            self.universe.add(self.space.decode_batch(np.stack(enc)))
+            self._rows.extend(enc)
+            t_new = np.asarray(other.times)[idx]
+            self.times.extend(float(t) for t in t_new)
+            self.histogram.add(t_new)
+            self._pruned = None
+        return self
 
 
 class TraceSink:
@@ -282,6 +576,7 @@ def register_sink(name: str, factory: Callable[..., Sink]) -> None:
 
 
 register_sink("dataset", DatasetSink)
+register_sink("histogram", HistogramSink)
 register_sink("trace", TraceSink)
 register_sink("telemetry", TelemetrySink)
 

@@ -32,8 +32,11 @@ from repro.rules.rulesets import (Rule, RuleSet, annotate_vs_canonical,
                                   class_range_accuracy_loop,
                                   extract_rulesets, render_rules_table,
                                   rules_by_class)
-from repro.rules.trees import (DecisionTree, Presort, RegressionTree,
-                               TreeSearchTrace, algorithm1)
+from repro.rules.trees import (ClassCountHistogram, DecisionTree,
+                               HistogramGrower, Presort, RegressionTree,
+                               TreeSearchTrace, algorithm1,
+                               algorithm1_from_histograms,
+                               fit_from_histograms)
 
 __all__ = [
     "GradientBoostedSurrogate", "OnlineSurrogateBase",
@@ -43,6 +46,7 @@ __all__ = [
     "Rule", "RuleSet", "annotate_vs_canonical", "class_range_accuracy",
     "class_range_accuracy_loop", "extract_rulesets", "render_rules_table",
     "rules_by_class",
-    "DecisionTree", "Presort", "RegressionTree", "TreeSearchTrace",
-    "algorithm1",
+    "ClassCountHistogram", "DecisionTree", "HistogramGrower",
+    "Presort", "RegressionTree", "TreeSearchTrace", "algorithm1",
+    "algorithm1_from_histograms", "fit_from_histograms",
 ]

@@ -43,7 +43,9 @@ from repro.rules.labels import Labeling, label_times
 from repro.rules.rulesets import (RuleSet, annotate_vs_canonical,
                                   class_range_accuracy, extract_rulesets,
                                   render_rules_table, rules_by_class)
-from repro.rules.trees import DecisionTree, TreeSearchTrace, algorithm1
+from repro.rules.trees import (DecisionTree, HistogramGrower,
+                               TreeSearchTrace, algorithm1,
+                               algorithm1_from_histograms)
 from repro.space.base import DesignSpace, as_space
 
 if TYPE_CHECKING:  # pragma: no cover - typing only, no runtime dep
@@ -154,7 +156,8 @@ def distill(result: "SearchResult",
             = None,
             range_widen: float = 0.0,
             initial_leaves: int | None = None,
-            features: FeatureMatrix | None = None) -> RuleReport:
+            features: FeatureMatrix | None = None,
+            histograms=None) -> RuleReport:
     """Label -> featurize -> Algorithm 1 -> rulesets, as one call.
 
     ``labeler`` maps the observed times to a :class:`Labeling`
@@ -175,10 +178,31 @@ def distill(result: "SearchResult",
     is skipped entirely — the sync-expansion work was already paid
     when the schedules streamed in. Only that stage is saved: the
     label, tree, and rules stages still scale with the whole corpus.
+
+    ``histograms`` is the out-of-core hook: a streamed-corpus handle
+    (a :class:`repro.driver.HistogramSink`, or anything exposing
+    ``n_rows`` / ``feature_list()`` / ``value_grids()`` /
+    ``blocks()``) whose feature matrix is *never* materialized. The
+    tree stage then runs Algorithm 1 through
+    :class:`repro.rules.trees.HistogramGrower` — one blockwise pass
+    per tree level, O(features x bins) extra memory — and produces the
+    same tree, rulesets, and training error bit for bit as the dense
+    path (locked by test); the report's ``feature_matrix`` carries the
+    pruned feature list over a 0-row ``X``. Mutually exclusive with
+    ``features`` and ``full_space``.
     """
+    if histograms is not None and features is not None:
+        raise ValueError(
+            "pass features= (dense streamed matrix) or histograms= "
+            "(out-of-core), not both")
+    if histograms is not None and full_space is not None:
+        raise ValueError(
+            "full_space= accuracy needs the in-memory feature path; "
+            "it cannot be combined with histograms=")
     stage_seconds: dict[str, float] = {}
-    distill_span = obs.span("rules.distill",
-                            n_schedules=len(result.schedules))
+    scheds = getattr(result, "schedules", None)
+    n_rows = len(scheds) if scheds is not None else len(result.times)
+    distill_span = obs.span("rules.distill", n_schedules=n_rows)
     distill_span.__enter__()
 
     def staged(name, fn):
@@ -194,16 +218,29 @@ def distill(result: "SearchResult",
     try:
         return _distill_staged(result, labeler, canonical, full_space,
                                range_widen, initial_leaves, features,
-                               staged, stage_seconds)
+                               histograms, staged, stage_seconds)
     finally:
         distill_span.__exit__(None, None, None)
 
 
 def _distill_staged(result, labeler, canonical, full_space, range_widen,
-                    initial_leaves, features, staged, stage_seconds):
+                    initial_leaves, features, histograms, staged,
+                    stage_seconds):
     times = np.asarray(result.times, dtype=np.float64)
     labeling = staged("label", lambda: labeler(times))
-    if features is not None:
+    grower = None
+    if histograms is not None:
+        if histograms.n_rows != len(times):
+            raise ValueError(
+                f"histogram corpus has {histograms.n_rows} rows but "
+                f"the result has {len(times)} times — the streamed "
+                "corpus must cover exactly the result's observations")
+        # The pruned feature list is the histogram path's "featurize":
+        # discovery is a blockwise min/max fold, never a matrix.
+        feats = staged("featurize", histograms.feature_list)
+        fm = FeatureMatrix(feats,
+                           np.zeros((0, len(feats)), dtype=np.int8))
+    elif features is not None:
         if features.X.shape[0] != len(result.schedules):
             raise ValueError(
                 f"features has {features.X.shape[0]} rows but the "
@@ -215,9 +252,20 @@ def _distill_staged(result, labeler, canonical, full_space, range_widen,
         fm = staged("featurize",
                     lambda: sp.featurize(list(result.schedules)))
     trace = TreeSearchTrace([], [], [])
-    tree = staged("tree",
-                  lambda: algorithm1(fm.X, labeling.labels, trace=trace,
-                                     initial_leaves=initial_leaves))
+    if histograms is not None:
+        def fit_tree():
+            nonlocal grower
+            grower = HistogramGrower(histograms.blocks, labeling.labels,
+                                     values=histograms.value_grids())
+            return algorithm1_from_histograms(
+                histograms.blocks, labeling.labels, trace=trace,
+                initial_leaves=initial_leaves, grower=grower)
+        tree = staged("tree", fit_tree)
+    else:
+        tree = staged("tree",
+                      lambda: algorithm1(fm.X, labeling.labels,
+                                         trace=trace,
+                                         initial_leaves=initial_leaves))
     rulesets = staged("rules",
                       lambda: extract_rulesets(tree, fm.features))
 
@@ -241,11 +289,17 @@ def _distill_staged(result, labeler, canonical, full_space, range_widen,
 
         acc = staged("accuracy", accuracy)
 
+    if histograms is not None:
+        n_schedules = histograms.n_rows
+        training_error = grower.training_error(tree)
+    else:
+        n_schedules = len(result.schedules)
+        training_error = tree.training_error(fm.X, labeling.labels)
     return RuleReport(
         graph=getattr(result, "graph", None),
         feature_matrix=fm, labeling=labeling,
         tree=tree, trace=trace, rulesets=rulesets,
-        n_schedules=len(result.schedules),
-        training_error=tree.training_error(fm.X, labeling.labels),
+        n_schedules=n_schedules,
+        training_error=training_error,
         class_range_acc=acc, annotated=annotated,
         stage_seconds=stage_seconds)

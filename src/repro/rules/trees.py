@@ -941,3 +941,537 @@ def algorithm1(X: np.ndarray, y: np.ndarray,
                 improved = True
                 break
     return clf
+
+
+# -- out-of-core histogram training (blockwise CART) -------------------------
+
+class ClassCountHistogram:
+    """Exact per-feature x per-class integer count histogram.
+
+    The foldable sufficient statistic of a CART node: for every
+    feature, how many rows of each class sit at each of the feature's
+    finitely many values. Binary features are 0/1 indicators and
+    multi-valued features have finite arity, so the counts are exact
+    ``int64`` integers — no sketching, no approximation — which is what
+    lets the histogram-trained tree reproduce the in-memory splitter
+    bit for bit.
+
+    ``values[j]`` is feature ``j``'s strictly increasing value grid;
+    all features' bins live concatenated in one ``(total_bins,
+    n_classes)`` count matrix (``offsets[j]:offsets[j+1]`` is feature
+    ``j``'s segment), so ``add`` folds a whole block with a single
+    ``np.bincount`` and ``subtract``/``merge`` are plain array
+    arithmetic. ``merge`` is associative and commutative (grids union,
+    counts add), so histograms folded on sharded hosts combine in any
+    order — mirroring the engine's sharded-miss design.
+    """
+
+    def __init__(self, values: list[np.ndarray], n_classes: int):
+        if n_classes < 1:
+            raise ValueError("n_classes must be >= 1")
+        self.values = [np.ascontiguousarray(np.asarray(v, dtype=np.float64)
+                                            .ravel()) for v in values]
+        for j, v in enumerate(self.values):
+            if v.size == 0:
+                raise ValueError(f"feature {j} has an empty value grid")
+            if v.size > 1 and not np.all(v[1:] > v[:-1]):
+                raise ValueError(
+                    f"feature {j} grid must be strictly increasing")
+        sizes = np.array([v.size for v in self.values], dtype=np.int64)
+        self.offsets = np.zeros(sizes.size + 1, dtype=np.int64)
+        np.cumsum(sizes, out=self.offsets[1:])
+        self.n_classes = int(n_classes)
+        self.counts = np.zeros((int(self.offsets[-1]), self.n_classes),
+                               dtype=np.int64)
+        # Arity-2 features bin with one vectorized comparison against
+        # the upper grid value; everything else takes a per-feature
+        # searchsorted.
+        self._bin2 = np.flatnonzero(sizes == 2)
+        self._multi = np.flatnonzero(sizes != 2)
+        if self._bin2.size:
+            self._lo2 = np.array([self.values[j][0] for j in self._bin2])
+            self._hi2 = np.array([self.values[j][1] for j in self._bin2])
+        else:
+            self._lo2 = self._hi2 = np.zeros(0, dtype=np.float64)
+
+    @property
+    def n_features(self) -> int:
+        return len(self.values)
+
+    def add(self, X: np.ndarray, y_enc: np.ndarray) -> "ClassCountHistogram":
+        """Fold one ``(rows, n_features)`` block of encoded labels."""
+        X = np.asarray(X)
+        if X.ndim != 2 or X.shape[1] != self.n_features:
+            raise ValueError(
+                f"expected (rows, {self.n_features}) block, got {X.shape}")
+        m = X.shape[0]
+        if m == 0:
+            return self
+        y_enc = np.asarray(y_enc)
+        if y_enc.shape != (m,):
+            raise ValueError(
+                f"block has {m} rows but y_enc has shape {y_enc.shape}")
+        K = self.n_classes
+        bins = np.empty((m, self.n_features), dtype=np.int64)
+        if self._bin2.size:
+            Xb = np.asarray(X[:, self._bin2], dtype=np.float64)
+            is_hi = Xb == self._hi2[None, :]
+            if not (is_hi | (Xb == self._lo2[None, :])).all():
+                raise ValueError("value outside a binary feature's grid")
+            bins[:, self._bin2] = is_hi
+        for j in self._multi:
+            v = self.values[j]
+            col = np.asarray(X[:, j], dtype=np.float64)
+            b = np.minimum(np.searchsorted(v, col), v.size - 1)
+            if not np.array_equal(v[b], col):
+                raise ValueError(
+                    f"value outside feature {int(j)}'s grid")
+            bins[:, j] = b
+        flat = (bins + self.offsets[:-1][None, :]) * K + y_enc[:, None]
+        self.counts += np.bincount(
+            flat.ravel(), minlength=self.counts.size
+        ).reshape(self.counts.shape)
+        return self
+
+    def class_counts(self) -> np.ndarray:
+        """Node class totals (feature 0's bins; every feature agrees)."""
+        return self.counts[self.offsets[0]:self.offsets[1]].sum(axis=0)
+
+    @property
+    def n(self) -> int:
+        return int(self.class_counts().sum())
+
+    def _check_shape(self, other: "ClassCountHistogram") -> None:
+        if not isinstance(other, ClassCountHistogram):
+            raise TypeError(f"expected ClassCountHistogram, got "
+                            f"{type(other).__name__}")
+        if other.n_classes != self.n_classes:
+            raise ValueError("class counts disagree on n_classes")
+        if other.n_features != self.n_features:
+            raise ValueError("class counts disagree on n_features")
+
+    def _same_grids(self, other: "ClassCountHistogram") -> bool:
+        return all(np.array_equal(a, b)
+                   for a, b in zip(self.values, other.values))
+
+    def subtract(self, other: "ClassCountHistogram") -> "ClassCountHistogram":
+        """``self - other`` on identical grids — the sibling trick
+        ``right_child = parent - left_child`` that halves per-level
+        scan work during growth. Returns a new histogram."""
+        self._check_shape(other)
+        if not self._same_grids(other):
+            raise ValueError("subtract requires identical value grids")
+        out = ClassCountHistogram(self.values, self.n_classes)
+        np.subtract(self.counts, other.counts, out=out.counts)
+        if np.any(out.counts < 0):
+            raise ValueError("subtrahend is not a sub-histogram")
+        return out
+
+    def merge(self, other: "ClassCountHistogram") -> "ClassCountHistogram":
+        """Exact union of two disjoint corpora's histograms.
+
+        Grids union (``np.union1d`` is exact on floats), counts land at
+        their value's position in the union — associative, commutative,
+        and equal to single-stream ``add`` of both corpora. Returns a
+        new histogram; neither input is touched.
+        """
+        self._check_shape(other)
+        if self._same_grids(other):
+            out = ClassCountHistogram(self.values, self.n_classes)
+            np.add(self.counts, other.counts, out=out.counts)
+            return out
+        grids = [np.union1d(a, b)
+                 for a, b in zip(self.values, other.values)]
+        out = ClassCountHistogram(grids, self.n_classes)
+        for src in (self, other):
+            for j in range(self.n_features):
+                pos = out.offsets[j] + np.searchsorted(out.values[j],
+                                                       src.values[j])
+                out.counts[pos] += src.counts[src.offsets[j]:
+                                              src.offsets[j + 1]]
+        return out
+
+
+def _hist_best_split(hist: ClassCountHistogram, bin_f: np.ndarray,
+                     nb_f: np.ndarray, class_w: np.ndarray,
+                     tcnt: np.ndarray, m: int, parent_imp: float,
+                     tot_w: float) -> tuple[float, int, float] | None:
+    """Best ``(gain, feature, threshold)`` of a node from its histogram.
+
+    Bit-identical to the in-memory vectorized splitter on an equal
+    node: the arity-2 candidates reproduce ``_best_split_binary``'s
+    count math (right histogram = upper-value bin counts) and
+    first-argmax tie-break over ascending feature index; multi-valued
+    candidates reproduce ``_best_split_sorted``'s boundary enumeration
+    — thresholds between consecutive *present* grid values, left
+    counts as cumulative per-bin class sums — with its strictly-greater
+    cross-feature merge; and the two paths resolve ties through the
+    same :func:`_merge_candidates`.
+    """
+    K = len(class_w)
+    best: tuple[float, int, float] | None = None
+    if bin_f.size:
+        rcnt = hist.counts[hist.offsets[bin_f] + 1]      # upper-value bin
+        nright = rcnt.sum(axis=1)
+        valid = (nright > 0) & (nright < m)
+        if valid.any():
+            left_counts = [tcnt[k] - rcnt[:, k] for k in range(K)]
+            right_counts = [rcnt[:, k] for k in range(K)]
+            with np.errstate(invalid="ignore", divide="ignore"):
+                gains = _gini_gains(left_counts, right_counts, class_w,
+                                    parent_imp, tot_w)
+            gains[~valid] = -np.inf
+            i = int(np.argmax(gains))        # first max: lowest feature
+            v = hist.values[int(bin_f[i])]
+            best = (float(gains[i]), int(bin_f[i]),
+                    float((v[0] + v[1]) / 2.0))
+    snd: tuple[float, int, float] | None = None
+    for f in nb_f:
+        seg = hist.counts[hist.offsets[f]:hist.offsets[f + 1]]
+        pres = np.flatnonzero(seg.sum(axis=1) > 0)
+        if pres.size < 2:
+            continue
+        lc = np.cumsum(seg[pres[:-1]], axis=0)    # left of boundary i
+        left_counts = [lc[:, k] for k in range(K)]
+        right_counts = [tcnt[k] - lc[:, k] for k in range(K)]
+        gains = _gini_gains(left_counts, right_counts, class_w,
+                            parent_imp, tot_w)
+        i = int(np.argmax(gains))
+        g = float(gains[i])
+        if snd is None or g > snd[0]:    # strict: earlier feature wins
+            v = hist.values[int(f)][pres]
+            snd = (g, int(f), float((v[i] + v[i + 1]) / 2.0))
+    return _merge_candidates(best, snd)
+
+
+class _HistNode:
+    """Node of the level-order histogram expansion (grower internal)."""
+
+    __slots__ = ("depth", "counts", "n_samples", "hist", "cand",
+                 "cand_done", "feature", "threshold", "left", "right")
+
+    def __init__(self, depth: int, counts: np.ndarray | None = None,
+                 n_samples: int = 0,
+                 hist: ClassCountHistogram | None = None):
+        self.depth = depth
+        self.counts = counts
+        self.n_samples = n_samples
+        self.hist = hist
+        self.cand: tuple[float, int, float] | None = None
+        self.cand_done = False
+        self.feature: int | None = None
+        self.threshold = 0.5
+        self.left: "_HistNode | None" = None
+        self.right: "_HistNode | None" = None
+
+
+class HistogramGrower:
+    """Out-of-core CART growth: one blockwise pass per tree level.
+
+    ``blocks`` is a callable returning an iterable of ``(rows,
+    n_features)`` blocks (or a re-iterable sequence of such blocks) —
+    typically a :class:`repro.driver.sinks.HistogramSink` featurizing
+    stored compact encodings on the fly. The grower never materializes
+    the ``(rows x features)`` matrix: it holds one
+    :class:`ClassCountHistogram` per *frontier* node (O(features x
+    bins x frontier) memory) and expands the candidate tree level by
+    level — each level is a single pass over the blocks, routing rows
+    with the vectorized :func:`_descend` and folding only the
+    **left**-child histograms; right children come free from the
+    subtraction trick ``right = parent - left``.
+
+    :meth:`fit` then replays the in-memory best-first heap over the
+    pre-expanded candidates, producing a genuine :class:`DecisionTree`
+    that is bit-identical (splits, thresholds, tie-breaks, ``predict``)
+    to ``DecisionTree(...).fit(X, y)`` on the materialized matrix —
+    locked by tests/test_histogram_trees.py. A node popped at depth
+    ``D`` needs ``D + 1`` of the at most ``max_leaf_nodes - 1`` pops,
+    so candidates are only ever needed down to depth
+    ``min(max_leaf_nodes - 2, max_depth - 1)``; repeated ``fit`` calls
+    (the Algorithm-1 sweep) reuse every level already expanded, the
+    histogram path's analogue of the in-memory ``split_cache``.
+    """
+
+    def __init__(self, blocks, y: np.ndarray,
+                 values: list[np.ndarray] | None = None):
+        self._blocks = blocks if callable(blocks) else (lambda: blocks)
+        self.y = np.asarray(y)
+        if self.y.ndim != 1:
+            raise ValueError(f"y must be 1-D, got shape {self.y.shape}")
+        self.n = int(self.y.shape[0])
+        if self.n == 0:
+            raise ValueError("y is empty")
+        self.classes_, y_enc = np.unique(self.y, return_inverse=True)
+        self.y_enc = y_enc.astype(np.int32)
+        self.n_classes = K = len(self.classes_)
+        counts = np.bincount(self.y_enc, minlength=K)
+        # class_weight='balanced', exactly as DecisionTree.fit
+        self.class_w = np.where(counts > 0,
+                                self.n / (K * np.maximum(counts, 1)), 0.0)
+        if values is None:
+            values = self._discover_values()
+        self.values = [np.asarray(v, dtype=np.float64) for v in values]
+        self.n_features = len(self.values)
+        arity = np.array([v.size for v in self.values], dtype=np.int64)
+        self.bin_f = np.flatnonzero(arity == 2)
+        self.nb_f = np.flatnonzero(arity >= 3)
+        root_hist = ClassCountHistogram(self.values, K)
+        rows = 0
+        for X, lo in self._iter():
+            root_hist.add(X, self.y_enc[lo:lo + X.shape[0]])
+            rows += X.shape[0]
+        if rows != self.n:
+            raise ValueError(
+                f"blocks yielded {rows} rows but y has {self.n}")
+        self.root = _HistNode(0, counts.astype(np.int64), self.n,
+                              root_hist)
+        self._frontier: list[_HistNode] = [self.root]
+        self._cand_depth = -1          # deepest level with candidates
+        self._exhausted = False
+
+    def _iter(self):
+        lo = 0
+        for X in self._blocks():
+            X = np.asarray(X)
+            if X.ndim != 2:
+                raise ValueError(f"blocks must be 2-D, got {X.shape}")
+            if lo + X.shape[0] > self.n:
+                raise ValueError(
+                    f"blocks yielded more than {self.n} rows")
+            yield X, lo
+            lo += X.shape[0]
+
+    def _discover_values(self) -> list[np.ndarray]:
+        vals: list[np.ndarray] | None = None
+        for X, _ in self._iter():
+            cols = [np.unique(np.asarray(X[:, j], dtype=np.float64))
+                    for j in range(X.shape[1])]
+            if vals is None:
+                vals = cols
+            elif len(cols) != len(vals):
+                raise ValueError("blocks disagree on feature count")
+            else:
+                vals = [np.union1d(a, b) for a, b in zip(vals, cols)]
+        if vals is None:
+            raise ValueError("blocks yielded no rows")
+        return vals
+
+    # -- level-order expansion -------------------------------------------
+    def _candidate(self, nd: _HistNode) -> tuple[float, int, float] | None:
+        if nd.n_samples < 2:
+            return None
+        parent_imp = _gini(self.class_w * nd.counts)
+        if parent_imp == 0.0:
+            return None
+        tot_w = _wsum(self.class_w * nd.counts)
+        res = _hist_best_split(nd.hist, self.bin_f, self.nb_f,
+                               self.class_w, nd.counts, nd.n_samples,
+                               parent_imp, tot_w)
+        # Zero-gain splits are allowed (CART/sklearn semantics), same
+        # tolerance as the in-memory grower.
+        if res is not None and res[0] >= -1e-12:
+            return res
+        return None
+
+    def _flatten_partial(self) -> tuple[tuple[np.ndarray, ...], dict]:
+        """Flatten the expansion tree so far; unexpanded nodes self-loop."""
+        nodes: list[_HistNode] = []
+
+        def walk(nd: _HistNode) -> None:
+            nodes.append(nd)
+            if nd.left is not None:
+                walk(nd.left)
+                walk(nd.right)
+
+        walk(self.root)
+        slot = {id(nd): i for i, nd in enumerate(nodes)}
+        size = len(nodes)
+        feat = np.full(size, -1, dtype=np.int64)
+        thr = np.zeros(size, dtype=np.float64)
+        left = np.arange(size, dtype=np.int64)
+        right = np.arange(size, dtype=np.int64)
+        for i, nd in enumerate(nodes):
+            if nd.left is not None:
+                feat[i] = nd.feature
+                thr[i] = nd.threshold
+                left[i] = slot[id(nd.left)]
+                right[i] = slot[id(nd.right)]
+        return (feat, thr, left, right, np.zeros(size)), slot
+
+    def _expand_level(self) -> None:
+        level = self._frontier
+        for nd in level:
+            if not nd.cand_done:
+                nd.cand = self._candidate(nd)
+                nd.cand_done = True
+        self._cand_depth += 1
+        splitting = [nd for nd in level if nd.cand is not None]
+        if not splitting:
+            for nd in level:
+                nd.hist = None
+            self._frontier = []
+            self._exhausted = True
+            return
+        K = self.n_classes
+        for nd in splitting:
+            _, f, thr = nd.cand
+            nd.feature, nd.threshold = int(f), float(thr)
+            nd.left = _HistNode(nd.depth + 1,
+                                hist=ClassCountHistogram(self.values, K))
+            nd.right = _HistNode(nd.depth + 1)
+        flat, slot = self._flatten_partial()
+        left_of = {slot[id(nd.left)]: nd for nd in splitting}
+        # One routing pass over the corpus fills every new left child's
+        # histogram; rows routed right (or to permanent leaves) are
+        # skipped — their counts come from the subtraction trick below.
+        # Routing with the *actual* split predicate (X <= thr via
+        # _descend) rather than histogram-boundary arithmetic keeps the
+        # partition identical to the in-memory ``ps.X[idx, f] <= thr``
+        # even when a midpoint rounds onto its upper grid value.
+        for X, lo in self._iter():
+            where = _descend(flat, np.asarray(X, dtype=np.float64))
+            yb = self.y_enc[lo:lo + X.shape[0]]
+            for s, nd in left_of.items():
+                mask = where == s
+                if mask.any():
+                    nd.left.hist.add(X[mask], yb[mask])
+        for nd in splitting:
+            lc = nd.left.hist.class_counts()
+            nd.left.counts = lc
+            nd.left.n_samples = int(lc.sum())
+            nd.right.hist = nd.hist.subtract(nd.left.hist)
+            nd.right.counts = nd.counts - lc
+            nd.right.n_samples = nd.n_samples - nd.left.n_samples
+            nd.hist = None                 # parent histogram retired
+        for nd in level:
+            if nd.cand is None:
+                nd.hist = None             # permanent leaf
+        self._frontier = [c for nd in splitting
+                          for c in (nd.left, nd.right)]
+
+    def _ensure(self, cand_depth: int) -> None:
+        while self._cand_depth < cand_depth and not self._exhausted:
+            self._expand_level()
+
+    # -- producing trees --------------------------------------------------
+    def fit(self, max_leaf_nodes: int,
+            max_depth: int | None = None) -> DecisionTree:
+        """Grow a :class:`DecisionTree` from the expanded candidates.
+
+        Replays the in-memory best-first heap — ``(-gain, node_id)``
+        ordering, pop-time child ids (left before right), depth gate
+        before candidate — over the histogram-scored splits.
+        """
+        tree = DecisionTree(max_leaf_nodes, max_depth)
+        tree.splitter = "histogram"
+        tree.classes_ = self.classes_
+        tree.n_classes = self.n_classes
+        cand_cap = max_leaf_nodes - 2
+        if max_depth is not None:
+            cand_cap = min(cand_cap, max_depth - 1)
+        self._ensure(cand_cap)
+        ids = itertools.count()
+        empty = np.zeros(0, dtype=np.int64)   # rows are never held
+
+        def mk(hn: _HistNode) -> TreeNode:
+            return TreeNode(next(ids), hn.depth, empty,
+                            self.class_w * hn.counts, hn.n_samples)
+
+        tree.root = mk(self.root)
+        heap: list[tuple[float, int, TreeNode, _HistNode]] = []
+
+        def push(tn: TreeNode, hn: _HistNode) -> None:
+            if max_depth is not None and tn.depth >= max_depth:
+                return
+            # A node popped at depth D needs D+1 pops of the at most
+            # max_leaf_nodes-1 total, so anything past cand_cap can
+            # never be popped — safe to leave off the heap even though
+            # the in-memory grower pushes it.
+            if hn.cand is None:
+                return
+            heapq.heappush(heap, (-hn.cand[0], tn.node_id, tn, hn))
+
+        push(tree.root, self.root)
+        n_leaves = 1
+        while heap and n_leaves < max_leaf_nodes:
+            _, _, tn, hn = heapq.heappop(heap)
+            tn.feature = hn.feature
+            tn.threshold = hn.threshold
+            tn.left = mk(hn.left)
+            tn.right = mk(hn.right)
+            n_leaves += 1
+            push(tn.left, hn.left)
+            push(tn.right, hn.right)
+        tree._flat = None
+        return tree
+
+    def training_error(self, tree: DecisionTree) -> float:
+        """Blockwise misclassification rate — equals
+        ``tree.training_error(X, y)`` on the materialized matrix."""
+        flat = tree._flatten()
+        wrong = 0
+        for X, lo in self._iter():
+            slots = _descend(flat, np.asarray(X, dtype=np.float64))
+            pred = tree.classes_[flat[4][slots].astype(np.int64)]
+            wrong += int(np.count_nonzero(
+                pred != self.y[lo:lo + X.shape[0]]))
+        return wrong / self.n
+
+
+def fit_from_histograms(blocks, y: np.ndarray, max_leaf_nodes: int,
+                        max_depth: int | None = None,
+                        values: list[np.ndarray] | None = None,
+                        grower: HistogramGrower | None = None
+                        ) -> DecisionTree:
+    """One histogram-trained CART fit; see :class:`HistogramGrower`.
+
+    ``blocks`` streams the feature matrix in row blocks (a callable
+    returning an iterable, or a re-iterable sequence); ``values``
+    optionally pins the per-feature value grids (skipping the
+    discovery pass — sinks know their grids). Pass an existing
+    ``grower`` to reuse its expanded levels across fits.
+    """
+    if grower is None:
+        grower = HistogramGrower(blocks, y, values=values)
+    return grower.fit(max_leaf_nodes, max_depth)
+
+
+def algorithm1_from_histograms(blocks, y: np.ndarray,
+                               initial_leaves: int | None = None,
+                               trace: TreeSearchTrace | None = None,
+                               values: list[np.ndarray] | None = None,
+                               grower: HistogramGrower | None = None
+                               ) -> DecisionTree:
+    """Paper Algorithm 1 through the out-of-core histogram path.
+
+    Identical trial schedule, stopping rule, and trees to
+    :func:`algorithm1` (locked by test): the shared grower's expanded
+    levels play the role of the in-memory sweep's presort +
+    split cache, so each re-trial only pays passes for the levels it
+    newly reaches.
+    """
+    if grower is None:
+        grower = HistogramGrower(blocks, y, values=values)
+    mln = initial_leaves if initial_leaves is not None \
+        else max(2, grower.n_classes)
+
+    def train(k: int) -> tuple[float, DecisionTree]:
+        t = grower.fit(max_leaf_nodes=k, max_depth=k - 1)
+        e = grower.training_error(t)
+        if trace is not None:
+            trace.max_leaf_nodes.append(k)
+            trace.errors.append(e)
+            trace.depths.append(t.depth())
+        return e, t
+
+    err, clf = train(mln)
+    improved = True
+    while improved and err > 0.0:
+        improved = False
+        for i in range(1, 6):
+            cur, nclf = train(mln + i)
+            if cur < err:
+                err, clf, mln = cur, nclf, mln + i
+                improved = True
+                break
+    return clf

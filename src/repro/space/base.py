@@ -75,6 +75,20 @@ class DesignSpace:
         """
         raise NotImplementedError
 
+    def decode_batch(self, enc: np.ndarray) -> list:
+        """Candidates back from canonical ``encode_batch`` rows.
+
+        The inverse of ``encode_batch`` on its own output: accepts the
+        ``(B, ...)`` int32 array (or the flattened per-row form — the
+        cache-key bytes reinterpreted) and returns the canonical
+        candidate each row denotes. This is what lets an out-of-core
+        sink store only compact encodings and re-featurize blocks on
+        the fly. Optional — spaces that never feed a histogram sink
+        need not implement it.
+        """
+        raise NotImplementedError(
+            f"design space {self.name!r} cannot decode encodings")
+
     def candidate_key(self, candidate: Any):
         """Hashable canonical identity of one candidate (dedup key)."""
         raise NotImplementedError
@@ -169,6 +183,16 @@ class DesignSpace:
         """Evaluate an explicit feature list on new candidates
         (classify-the-full-space / surrogate-predict path)."""
         raise NotImplementedError
+
+    def feature_universe(self):
+        """Names-only candidate-feature tracker for out-of-core
+        corpora: ``.add(candidates)`` absorbs (O(1) memory per
+        candidate), ``.candidate_features()`` lists the unpruned
+        feature list in the basis order, ``.merge(other)`` unions two
+        hosts' universes. Optional — only histogram sinks need it.
+        """
+        raise NotImplementedError(
+            f"design space {self.name!r} has no feature universe")
 
     # -- evaluation support ------------------------------------------------
     def durations(self, machine) -> dict:

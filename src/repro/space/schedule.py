@@ -29,7 +29,8 @@ from repro.core.costmodel import op_durations, simulate
 from repro.core.dag import BoundOp, Graph, OpKind, Schedule
 from repro.core.enumerate import enumerate_schedules
 from repro.core.features import (FeatureBasis, FeatureMatrix,
-                                 apply_features, featurize)
+                                 FeatureUniverse, apply_features,
+                                 featurize)
 from repro.space.base import DesignSpace
 
 
@@ -170,6 +171,28 @@ class ScheduleSpace(DesignSpace):
                 -1)
         return [row.tobytes() for row in enc], enc
 
+    def decode_batch(self, enc: np.ndarray) -> list[Schedule]:
+        """Schedules back from ``encode_batch`` rows.
+
+        Accepts ``(B, 2, N)`` or per-row flattened ``(B, 2*N)`` int32
+        (the cache-key bytes reinterpreted). Streams come back exactly
+        as encoded — the canonical first-use labels — so the result is
+        each row's canonical representative schedule: identical cache
+        key, identical expanded sequence and feature vector (sync
+        insertion depends only on same-stream relations, never on
+        stream *ids*).
+        """
+        enc = np.asarray(enc, dtype=np.int32)
+        names = list(self._op_id)
+        n = len(names)
+        enc = enc.reshape(-1, 2, n)
+        out: list[Schedule] = []
+        for row in enc:
+            out.append(Schedule(tuple(
+                BoundOp(names[int(o)], None if s < 0 else int(s))
+                for o, s in zip(row[0], row[1]))))
+        return out
+
     def candidate_key(self, schedule: Schedule) -> tuple:
         return canonical_key(schedule)
 
@@ -208,6 +231,9 @@ class ScheduleSpace(DesignSpace):
     def apply_features(self, schedules: Sequence[Schedule],
                        features: list) -> np.ndarray:
         return apply_features(self.graph, list(schedules), features)
+
+    def feature_universe(self) -> FeatureUniverse:
+        return FeatureUniverse(self.graph)
 
     # -- evaluation support ------------------------------------------------
     def durations(self, machine) -> dict:

@@ -407,6 +407,27 @@ def test_dataset_sink_streams_byte_identical_dataset():
     assert sink.histogram.n == len(res.schedules)
 
 
+def test_dataset_sink_matrix_cache_invalidated_by_consume():
+    """matrix() prunes once per corpus length: repeated calls return
+    the same object, a consume that adds rows drops the cache, and the
+    cached matrix stays byte-identical to a fresh pruning pass."""
+    g = C.spmv_dag()
+    sink = DatasetSink(g)
+    SearchDriver(g, S.RandomSearch(g, 2, seed=0), budget=40,
+                 batch_size=8, sinks=[sink]).run()
+    fm = sink.matrix()
+    assert sink.matrix() is fm                 # cached, not re-pruned
+    assert sink.dataset()[0] is fm
+    SearchDriver(g, S.RandomSearch(g, 2, seed=1), budget=40,
+                 batch_size=8, sinks=[sink]).run()
+    fm2 = sink.matrix()
+    assert fm2 is not fm                       # new rows invalidated it
+    assert fm2.X.shape[0] == len(sink.schedules)
+    fresh = sink.basis.matrix()
+    assert fm2.features == fresh.features
+    assert fm2.X.tobytes() == fresh.X.tobytes()
+
+
 def test_dataset_sink_distill_skips_featurize():
     import repro.rules as R
     g = C.spmv_dag()

@@ -2,7 +2,7 @@
 import pytest
 
 from benchmarks.smoke import (run_autotune_smoke, run_backend_smoke,
-                              run_smoke, run_store_smoke)
+                              run_ooc_smoke, run_smoke, run_store_smoke)
 
 
 @pytest.mark.smoke
@@ -41,6 +41,18 @@ def test_smoke_kernel_autotune(tmp_path):
     assert not out["warm_cache_restored"]        # tmp file starts cold
     assert out["second"]["store_hits"] == 2
     assert out["second"]["misses"] == 0
+
+
+@pytest.mark.smoke
+def test_smoke_ooc_distill_memory_ceiling():
+    """Out-of-core tree training under a hard RLIMIT_AS ceiling sized
+    so the dense path cannot possibly fit: the histogram path must
+    pass, the dense fit must MemoryError — proving the OOC peak really
+    is independent of the corpus, not just smaller on average."""
+    out = run_ooc_smoke()
+    assert out["ooc_ok"]
+    assert not out["dense_ok"]
+    assert out["dense"]["memory_error"]
 
 
 @pytest.mark.smoke
