@@ -15,6 +15,15 @@ evaluator, first against an empty store file (cold: every schedule
 simulated + written through) and then against the warmed file (warm:
 every schedule replayed from disk, zero simulations) — the CI/sweep
 warm-start speedup, with the identity verdict in the derived column.
+
+The ``engine_rpc_{cold,warm,hedged}`` rows race evaluation as a
+service (:mod:`repro.engine.rpc`): the same traffic sharded over a
+freshly spawned two-host localhost fleet of ``repro.engine.server``
+subprocesses hosting the vectorized backend (cold — must beat serial,
+and be float-identical to it), replayed from the client's store with
+zero dispatches (warm), and dispatched against a fleet containing a
+deliberate straggler host so the hedging path is what the row times
+(hedged).
 """
 from __future__ import annotations
 
@@ -96,6 +105,8 @@ def engine_benches(n_schedules: int = N_SCHEDULES) -> list[str]:
         rows.append(f"engine_{backend}_halo3d_{len(schedules)},"
                     f"{us:.2f},{derived}")
     rows.extend(store_benches(g, schedules))
+    rows.extend(rpc_benches(g, schedules, warmup, best["sim"],
+                            results["sim"]))
     return rows
 
 
@@ -129,4 +140,88 @@ def store_benches(graph, schedules) -> list[str]:
         rows.append(f"engine_store_warm_halo3d_{n},"
                     f"{best_warm / n * 1e6:.2f},"
                     f"{best_cold / best_warm:.2f}x_vs_cold_{ident}")
+    return rows
+
+
+def rpc_benches(graph, schedules, warmup, serial_s,
+                serial_out) -> list[str]:
+    """Cold / warm / hedged rows for the ``rpc`` evaluation service.
+
+    Each cold rep spawns a *fresh* two-host localhost fleet (server
+    memo caches persist across requests, so reusing a fleet would turn
+    later reps into server-side cache replays) hosting the vectorized
+    backend — the fleet's advertised use: the inner backend is the
+    host's choice. The warmup batch first-touches the connections and
+    the servers' numpy buffers so the timed number is steady-state
+    dispatch throughput. The warm rep runs a fresh client against the
+    store the cold rep wrote through: zero measurements, zero
+    dispatches. The hedged rep adds a deliberate straggler host
+    (``--delay``) so the row times the hedged re-dispatch path.
+    """
+    from repro.engine.server import spawn_server_process
+
+    rows = []
+    n = len(schedules)
+    best_cold = best_warm = float("inf")
+    cold_out = warm_out = None
+    warm_misses = -1
+    with tempfile.TemporaryDirectory() as tmp:
+        for rep in range(2):
+            path = os.path.join(tmp, f"rpc.{rep}.evalstore")
+            servers = [spawn_server_process("halo3d",
+                                            backend="vectorized")
+                       for _ in range(2)]
+            try:
+                hosts = [s.addr for s in servers]
+                with E.make_evaluator(graph, "rpc", hosts=hosts,
+                                      store_path=path) as ev:
+                    ev.evaluate(warmup)
+                    t0 = time.perf_counter()
+                    cold_out = ev.evaluate(schedules)
+                    best_cold = min(best_cold,
+                                    time.perf_counter() - t0)
+                    assert ev.local_evals == 0
+                with E.make_evaluator(graph, "rpc", hosts=hosts,
+                                      store_path=path) as ev:
+                    t0 = time.perf_counter()
+                    warm_out = ev.evaluate(schedules)
+                    best_warm = min(best_warm,
+                                    time.perf_counter() - t0)
+                    warm_misses = ev.cache_misses
+            finally:
+                for s in servers:
+                    s.terminate()
+    ident = "identical" if cold_out == serial_out else "MISMATCH"
+    rows.append(f"engine_rpc_cold_halo3d_{n},"
+                f"{best_cold / n * 1e6:.2f},"
+                f"{serial_s / best_cold:.2f}x_vs_serial_{ident}")
+    ident = "identical" if warm_out == cold_out else "MISMATCH"
+    rows.append(f"engine_rpc_warm_halo3d_{n},"
+                f"{best_warm / n * 1e6:.2f},"
+                f"{best_cold / best_warm:.2f}x_vs_cold_{ident}_"
+                f"{warm_misses}_measurements")
+
+    best_hedged = float("inf")
+    hedged_out = None
+    hedges = 0
+    servers = [spawn_server_process("halo3d", backend="vectorized"),
+               spawn_server_process("halo3d", backend="vectorized",
+                                    delay=0.05)]
+    try:
+        hosts = [s.addr for s in servers]
+        with E.make_evaluator(graph, "rpc", hosts=hosts,
+                              max_inflight=2) as ev:
+            ev.evaluate(warmup)
+            t0 = time.perf_counter()
+            hedged_out = ev.evaluate(schedules)
+            best_hedged = time.perf_counter() - t0
+            hedges = sum(h["hedged"] for h in
+                         ev.rpc_stats()["hosts"].values())
+    finally:
+        for s in servers:
+            s.terminate()
+    ident = "identical" if hedged_out == serial_out else "MISMATCH"
+    rows.append(f"engine_rpc_hedged_halo3d_{n},"
+                f"{best_hedged / n * 1e6:.2f},"
+                f"{hedges}_hedges_{ident}")
     return rows

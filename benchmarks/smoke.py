@@ -17,6 +17,10 @@ path — a 2-point block-size sweep through the param-space wallclock
 evaluator — and :func:`run_store_smoke` / the ``store_path`` form of
 the autotune smoke are the CI warm-start gates for the schedule-space
 and kernel-space store fingerprints respectively.
+:func:`run_rpc_smoke` spins up a two-host localhost evaluation fleet
+(``repro.engine.server`` subprocesses sharing one ``EvalStore``) and
+gates on a cold ``--backend rpc`` search matching serial plus a warm
+one replaying with zero ``engine.measure`` spans.
 """
 from __future__ import annotations
 
@@ -159,6 +163,82 @@ def run_store_smoke(store_path: str, budget: int = 120,
                    "rounds": spans.get("driver.round", {}).get("count",
                                                                0)},
         "warm_cache_restored": first.cache_misses == 0,
+    }
+
+
+def run_rpc_smoke(store_path: str, sim_budget: int = 60,
+                  seed: int = 0) -> dict:
+    """The evaluation service validating itself, end to end.
+
+    Spins up two localhost ``repro.engine.server`` subprocesses that
+    share one :class:`~repro.engine.store.EvalStore` file, then runs
+    the same halo3d MCTS search three ways:
+
+    1. a serial ``sim`` reference;
+    2. a cold ``rpc`` pass against the two-host fleet (the client also
+       attaches ``store_path``, so misses dispatched over the wire are
+       written through — every party appends whole records to the one
+       file, duplicates resolve first-record-wins);
+    3. a warm ``rpc`` pass with a fresh evaluator, run under its own
+       :mod:`repro.obs` registry — it must replay entirely from the
+       shared store: ``store_hits > 0``, zero measurements, and zero
+       ``engine.measure`` spans (the telemetry-side gate, mirroring
+       :func:`run_store_smoke`).
+
+    All three passes must produce byte-identical times. On a restored
+    CI cache even the cold pass replays from disk — reported as
+    ``warm_cache_restored``, same semantics as :func:`run_store_smoke`.
+    """
+    from repro import obs
+    from repro.core.dag import halo3d_dag
+    from repro.engine.server import spawn_server_process
+
+    g = halo3d_dag()
+
+    def search(backend, **kw):
+        return S.run_search(g, S.MCTSSearch(g, 2, seed=seed),
+                            budget=None, sim_budget=sim_budget,
+                            batch_size=8, backend=backend,
+                            store_path=store_path, **kw)
+
+    reference = S.run_search(g, S.MCTSSearch(g, 2, seed=seed),
+                             budget=None, sim_budget=sim_budget,
+                             batch_size=8, backend="sim")
+    servers = [spawn_server_process("halo3d", backend="sim",
+                                    store_path=store_path)
+               for _ in range(2)]
+    try:
+        hosts = [s.addr for s in servers]
+        cold = search("rpc", backend_kwargs={"hosts": hosts,
+                                             "min_shard": 1})
+        tel = obs.Telemetry()
+        with obs.use(tel):
+            warm = search("rpc", backend_kwargs={"hosts": hosts,
+                                                 "min_shard": 1})
+        tel.close()
+    finally:
+        for s in servers:
+            s.terminate()
+    spans = tel.spans_by_name()
+    assert cold.times == reference.times, \
+        "rpc search diverged from the serial reference"
+    assert warm.times == cold.times, \
+        "warm rpc replay diverged from the cold run"
+    assert warm.store_hits > 0, \
+        "warm rpc search reported no store hits"
+    assert warm.cache_misses == 0, \
+        f"warm rpc search still measured {warm.cache_misses} schedules"
+    return {
+        "hosts": len(servers),
+        "cold": {"misses": cold.cache_misses,
+                 "store_hits": cold.store_hits},
+        "warm": {"misses": warm.cache_misses,
+                 "store_hits": warm.store_hits,
+                 "measure_spans":
+                     spans.get("engine.measure", {}).get("count", 0),
+                 "rounds": spans.get("driver.round", {}).get("count", 0)},
+        "rpc_identical_to_sim": cold.times == reference.times,
+        "warm_cache_restored": cold.cache_misses == 0,
     }
 
 

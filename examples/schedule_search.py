@@ -21,7 +21,8 @@ Usage: PYTHONPATH=src python examples/schedule_search.py
            [--arch qwen2.5-32b] [--layers 4] [--iters 600]
            [--space spmv|halo3d|flash_attention|...]
            [--strategy portfolio|mcts]
-           [--backend sim|vectorized|pool|wallclock]
+           [--backend sim|vectorized|pool|wallclock|rpc]
+           [--hosts host:port,host:port]
            [--surrogate ridge|boost]
            [--acquisition argmin_topk|ucb|expected_improvement]
            [--rules [PATH]] [--store PATH]
@@ -74,13 +75,19 @@ def main() -> None:
                          "(graph spaces only; kernel grids always "
                          "use mcts)")
     ap.add_argument("--backend",
-                    choices=("sim", "vectorized", "pool", "wallclock"),
+                    choices=("sim", "vectorized", "pool", "wallclock",
+                             "rpc"),
                     default=None,
                     help="evaluation engine (repro.engine registry); "
                          "all analytic backends are bit-identical — "
                          "a pure throughput choice. Default: sim for "
                          "analytic spaces, wallclock for kernel "
-                         "grids (see src/repro/engine/README.md)")
+                         "grids (see src/repro/engine/README.md). "
+                         "rpc requires --hosts")
+    ap.add_argument("--hosts", default=None, metavar="H:P,H:P",
+                    help="comma-separated host:port evaluation servers "
+                         "for --backend rpc (each running python -m "
+                         "repro.engine.server on a matching --space)")
     ap.add_argument("--batch-size", type=int, default=None,
                     help="schedules per propose() call; default 1 for "
                          "the sim backend (the paper's strictly "
@@ -167,6 +174,16 @@ def main() -> None:
         args.backend = "wallclock" if kernel_grid else "sim"
     if args.batch_size is None:
         args.batch_size = 1 if args.backend == "sim" else 32
+    backend_kwargs = None
+    if args.backend == "rpc":
+        if not args.hosts:
+            ap.error("--backend rpc requires --hosts host:port[,...]")
+        hosts = [h.strip() for h in args.hosts.split(",") if h.strip()]
+        backend_kwargs = {"hosts": hosts}
+        print(f"evaluation fleet: {len(hosts)} host(s) "
+              f"({', '.join(hosts)})")
+    elif args.hosts:
+        ap.error("--hosts only applies to --backend rpc")
 
     if args.strategy == "portfolio" and graph is not None:
         strategy = S.PortfolioSearch(graph, args.channels, seed=0,
@@ -177,6 +194,7 @@ def main() -> None:
             else S.MCTSSearch(graph, args.channels, seed=0)
     res = S.run_search(target, strategy, budget=args.iters,
                        backend=args.backend, batch_size=args.batch_size,
+                       backend_kwargs=backend_kwargs,
                        store_path=args.store)
     times = res.times_array()
     best, best_t = res.best()

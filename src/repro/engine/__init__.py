@@ -1,4 +1,4 @@
-"""Pluggable evaluation engine: one contract, four backends.
+"""Pluggable evaluation engine: one contract, five backends.
 
 Evaluation is the bottleneck resource of the whole pipeline — MCTS and
 the surrogate portfolio explore thousands of schedules, and every
@@ -24,6 +24,10 @@ Backends (see README.md in this package for the full matrix):
                   gate): the jitted token-chain executor for schedule
                   spaces, the kernel-runner sweep for parameter spaces
                   (:func:`make_evaluator` dispatches on the space).
+  ``rpc``         evaluation as a service: miss batches sharded over a
+                  fleet of :mod:`repro.engine.server` hosts with
+                  pipelined dispatch, retry/hedging fault tolerance,
+                  and local fallback — byte-identical to ``sim``.
 
 Every backend accepts a :class:`~repro.core.dag.Graph` (wrapped into
 the paper's schedule space) or any
@@ -38,6 +42,8 @@ from repro.engine.base import (BatchEvaluator, EvalBatch, EvaluatorBase,
                                canonical_key)
 from repro.engine.params import KernelWallclockEvaluator
 from repro.engine.pool import PoolEvaluator
+from repro.engine.rpc import (RpcError, RpcEvaluator, RpcHandshakeError,
+                              RpcProtocolError)
 from repro.engine.store import EvalStore, store_fingerprint
 from repro.engine.vectorized import (GraphTables, VectorizedEvaluator,
                                      simulate_batch, simulate_encoded)
@@ -51,7 +57,20 @@ BACKENDS: dict[str, type[EvaluatorBase]] = {
     "vectorized": VectorizedEvaluator,
     "pool": PoolEvaluator,
     "wallclock": ExecutorEvaluator,
+    "rpc": RpcEvaluator,
 }
+
+
+def __getattr__(name: str):
+    # The server module is imported lazily so that
+    # ``python -m repro.engine.server`` does not trip runpy's
+    # already-in-sys.modules warning (and a bare ``import repro.engine``
+    # never pays for the subprocess/CLI machinery).
+    if name in ("EvalServer", "ServerProcess", "spawn_server_process"):
+        from repro.engine import server
+
+        return getattr(server, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 def register_backend(name: str, cls: type[EvaluatorBase]) -> None:
@@ -67,7 +86,8 @@ def make_evaluator(graph: Graph, backend: str = "sim", *,
     """Construct the named evaluation backend for ``graph``.
 
     ``kwargs`` are backend-specific (``n_workers`` for ``pool``;
-    ``impls``/``env``/``repeats`` for ``wallclock``) plus the shared
+    ``impls``/``env``/``repeats`` for ``wallclock``; ``hosts`` for
+    ``rpc``) plus the shared
     base-layer knobs everywhere: ``noise_sigma`` / ``noise_seed`` and
     the persistent cross-run store (``store=`` a shared
     :class:`~repro.engine.store.EvalStore`, or ``store_path=`` a file
@@ -93,6 +113,8 @@ __all__ = [
     "VectorizedEvaluator", "GraphTables", "simulate_batch",
     "simulate_encoded",
     "PoolEvaluator",
+    "RpcEvaluator", "RpcError", "RpcHandshakeError", "RpcProtocolError",
+    "EvalServer", "ServerProcess", "spawn_server_process",
     "EvalStore", "store_fingerprint",
     "ExecutorEvaluator", "KernelWallclockEvaluator",
     "assert_outputs_close", "demo_spmv_impls", "reference_schedule",

@@ -19,8 +19,10 @@ simulation cost it parallelizes. Workers rebuild the schedules and run
 the serial discrete-event simulator; the canonical stream relabel is a
 bijection, under which the simulator is exactly invariant (columns of
 per-stream state permute), so results stay bit-identical to evaluating
-the original schedules. ``Pool.map`` preserves order, so results line
-up with the first-appearance miss order the base class expects.
+the original schedules. Shards are dispatched via ``imap_unordered``
+with an index tag — a straggler shard never serializes collection of
+the others — and reassembled by index into the first-appearance miss
+order the base class expects.
 
 The default start method is ``forkserver`` (falling back to ``spawn``
 where unavailable): the parent typically has JAX loaded — whose thread
@@ -62,6 +64,17 @@ def _simulate_shard(encoded: np.ndarray) -> list[float]:
         out.append(simulate(graph, Schedule(items), machine,
                             durations=durations).makespan)
     return out
+
+
+def _simulate_shard_indexed(task: tuple[int, np.ndarray]
+                            ) -> tuple[int, list[float]]:
+    """(shard index, encodings) -> (shard index, makespans).
+
+    The index rides along so shards can be dispatched out of order
+    (``imap_unordered``) and still be reassembled exactly.
+    """
+    idx, encoded = task
+    return idx, _simulate_shard(encoded)
 
 
 class PoolEvaluator(EvaluatorBase):
@@ -116,9 +129,18 @@ class PoolEvaluator(EvaluatorBase):
         bounds = [n * k // n_shards for k in range(n_shards + 1)]
         shards = [encoded[bounds[k]:bounds[k + 1]]
                   for k in range(n_shards)]
+        # imap_unordered instead of the map() barrier: each shard is
+        # tagged with its index and collected as it finishes, so one
+        # straggler shard no longer serializes result collection —
+        # while reassembly by index keeps the output order (and
+        # therefore the whole search) bit-identical to serial.
+        parts: dict[int, list[float]] = {}
+        for idx, part in self._ensure_pool().imap_unordered(
+                _simulate_shard_indexed, list(enumerate(shards))):
+            parts[idx] = part
         out: list[float] = []
-        for part in self._ensure_pool().map(_simulate_shard, shards):
-            out.extend(part)
+        for idx in range(n_shards):
+            out.extend(parts[idx])
         return out
 
     def close(self) -> None:

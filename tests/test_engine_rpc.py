@@ -1,0 +1,301 @@
+"""engine.rpc: fleet evaluation is byte-identical to serial.
+
+The ``rpc`` backend ships canonical-unique miss batches to evaluator
+hosts as contiguous shards in first-appearance order, with the memo
+cache, three-way hit/miss meters, and (canonical key, draw index)
+noise all kept client-side — so a fleet-evaluated search must
+reproduce the serial backend exactly: same (features, labels, times),
+same ``sim_budget`` accounting, for any host count, with hedged
+re-dispatch, and across injected host deaths. That identity — plus
+the wire framing, the fingerprint handshake, and the local-fallback
+degradation — is what this file locks.
+"""
+import random
+import socket
+
+import numpy as np
+import pytest
+
+import repro.core as C
+import repro.engine as E
+import repro.search as S
+from repro.core.dag import halo3d_dag, spmv_dag_fine
+from repro.engine import rpc
+from repro.engine.server import EvalServer
+from repro.search.strategy import random_schedule
+
+# Every in-process server / client pair lives on the loopback device;
+# budgets are small because the suite runs on one-CPU CI boxes.
+
+
+def _servers(space, n, backend="sim", **kw):
+    return [EvalServer(space, backend=backend, **kw).start()
+            for _ in range(n)]
+
+
+def _close_all(servers):
+    for s in servers:
+        s.close()
+
+
+# -- wire format --------------------------------------------------------------
+
+def test_frame_roundtrip_and_crc():
+    a, b = socket.socketpair()
+    try:
+        payload = bytes([rpc.MSG_WELCOME]) + b"{}"
+        rpc.send_frame(a, payload)
+        assert rpc.recv_frame(b) == (rpc.MSG_WELCOME, b"{}")
+        # Flip one payload byte in an otherwise well-formed frame: the
+        # CRC must catch it (corrupt frames are host failures, never
+        # silently-wrong data).
+        buf = bytearray(rpc._LEN.pack(len(payload)) + payload
+                        + rpc._LEN.pack(__import__("zlib").crc32(payload)))
+        buf[5] ^= 0xFF
+        a.sendall(bytes(buf))
+        with pytest.raises(rpc.RpcProtocolError, match="CRC"):
+            rpc.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_rejects_implausible_length():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(rpc._LEN.pack(rpc.MAX_FRAME + 1))
+        with pytest.raises(rpc.RpcProtocolError, match="length"):
+            rpc.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_message_codecs_roundtrip():
+    fp = bytes(range(16))
+    assert rpc.decode_hello(rpc.encode_hello(fp)[1:]) == fp
+    with pytest.raises(rpc.RpcProtocolError, match="magic"):
+        rpc.decode_hello(b"NOT-THE-MAGIC----" + bytes(18))
+
+    enc = np.arange(24, dtype=np.int32).reshape(3, 2, 4)
+    sid, back = rpc.decode_eval(rpc.encode_eval(7, enc)[1:])
+    assert sid == 7 and back.dtype == np.dtype("<i4")
+    assert np.array_equal(back, enc)
+
+    times = [1.5, 2.25, 3.125]
+    sid, got = rpc.decode_result(rpc.encode_result(9, times)[1:])
+    assert sid == 9 and got.tolist() == times
+
+    sid, msg = rpc.decode_error(rpc.encode_error(3, "boom")[1:])
+    assert (sid, msg) == (3, "boom")
+
+
+def test_parse_host():
+    assert rpc.parse_host("127.0.0.1:9876") == ("127.0.0.1", 9876)
+    assert rpc.parse_host(("h", 1)) == ("h", 1)
+    with pytest.raises(ValueError):
+        rpc.parse_host("no-port")
+
+
+# -- bit-identity vs the serial backend ---------------------------------------
+
+@pytest.mark.parametrize("n_servers", [1, 2, 3])
+def test_rpc_bit_identical_to_serial(n_servers):
+    g = halo3d_dag()
+    servers = _servers(g, n_servers)
+    rng = random.Random(7)
+    scheds = [random_schedule(g, 2, rng) for _ in range(48)]
+    try:
+        with E.make_evaluator(g, "rpc", hosts=[s.addr for s in servers],
+                              min_shard=1, max_inflight=2) as ev:
+            assert ev.evaluate(scheds) == [C.makespan(g, s)
+                                           for s in scheds]
+            assert ev.local_evals == 0
+            assert sum(h["shards_done"] for h in
+                       ev.rpc_stats()["hosts"].values()) > 0
+    finally:
+        _close_all(servers)
+
+
+def test_rpc_accounting_matches_serial():
+    g = spmv_dag_fine()
+    servers = _servers(g, 2)
+    rng = random.Random(8)
+    scheds = [random_schedule(g, 2, rng) for _ in range(40)]
+    batch = scheds + scheds[:10]          # duplicates -> memory hits
+    ser = E.make_evaluator(g, "sim")
+    try:
+        with E.make_evaluator(g, "rpc", hosts=[s.addr for s in servers],
+                              min_shard=1) as ev:
+            assert ev.evaluate(batch) == ser.evaluate(batch)
+            assert (ev.cache_hits, ev.cache_misses) == \
+                (ser.cache_hits, ser.cache_misses)
+            assert ev.stats()["backend"] == "rpc"
+            assert len(ev) == len(ser)
+    finally:
+        _close_all(servers)
+
+
+@pytest.mark.parametrize("make_strategy", [
+    lambda g: S.MCTSSearch(g, 2, seed=5),
+    lambda g: S.RandomSearch(g, 2, seed=5),
+], ids=["mcts", "random"])
+def test_run_search_rpc_byte_identical_dataset(make_strategy):
+    """The acceptance lock: run_search(backend='rpc') returns
+    byte-identical (features, labels, times) and budget accounting to
+    the serial backend at equal sim_budget, on halo3d."""
+    g = halo3d_dag()
+    servers = _servers(g, 2)
+    hosts = [s.addr for s in servers]
+    datasets = {}
+    try:
+        for backend, kwargs in (
+                ("sim", {}),
+                ("rpc", {"hosts": hosts, "min_shard": 1})):
+            res = S.run_search(g, make_strategy(g), budget=None,
+                               sim_budget=60, batch_size=8,
+                               backend=backend, backend_kwargs=kwargs)
+            datasets[backend] = (res, *res.dataset())
+    finally:
+        _close_all(servers)
+    res_a, fm_a, lab_a, t_a = datasets["sim"]
+    res_b, fm_b, lab_b, t_b = datasets["rpc"]
+    assert t_a.tobytes() == t_b.tobytes()
+    assert fm_a.X.tobytes() == fm_b.X.tobytes()
+    assert fm_a.names() == fm_b.names()
+    assert np.array_equal(lab_a.labels, lab_b.labels)
+    assert (res_a.cache_hits, res_a.cache_misses) == \
+        (res_b.cache_hits, res_b.cache_misses)
+
+
+def test_rpc_noise_identical_to_serial_noise():
+    """(canonical key, draw index) noise stays client-side: only base
+    times cross the wire, so noisy fleet == noisy serial exactly."""
+    g = C.spmv_dag()
+    servers = _servers(g, 2)
+    rng = random.Random(3)
+    scheds = [random_schedule(g, 2, rng) for _ in range(24)]
+    try:
+        with E.make_evaluator(g, "rpc", hosts=[s.addr for s in servers],
+                              min_shard=1, noise_sigma=0.05,
+                              noise_seed=11) as ev:
+            noisy_rpc = ev.evaluate(scheds)
+    finally:
+        _close_all(servers)
+    ser = E.make_evaluator(g, "sim", noise_sigma=0.05, noise_seed=11)
+    assert noisy_rpc == ser.evaluate(scheds)
+
+
+# -- fault tolerance ----------------------------------------------------------
+
+class _KillerStrategy:
+    """Wraps a strategy; closes one server after ``after`` proposals —
+    the "host dies mid-search" event, injected deterministically."""
+
+    def __init__(self, inner, server, after):
+        self.inner = inner
+        self.server = server
+        self.after = after
+        self.calls = 0
+
+    def propose(self, budget):
+        self.calls += 1
+        if self.calls == self.after:
+            self.server.close()
+        return self.inner.propose(budget)
+
+    def observe(self, schedule, time):
+        self.inner.observe(schedule, time)
+
+
+def test_rpc_server_killed_mid_search_identical():
+    """Kill one of two servers between rounds: the run completes (the
+    survivor absorbs re-queued shards) with results byte-identical to
+    serial, and the dead host is marked."""
+    g = halo3d_dag()
+    servers = _servers(g, 2)
+    try:
+        ref = S.run_search(g, S.MCTSSearch(g, 2, seed=5), budget=None,
+                           sim_budget=60, batch_size=8, backend="sim")
+        ev = E.make_evaluator(g, "rpc", hosts=[s.addr for s in servers],
+                              min_shard=1, retries=1, backoff=0.01)
+        res = S.run_search(
+            g, _KillerStrategy(S.MCTSSearch(g, 2, seed=5),
+                               servers[0], after=3),
+            budget=None, sim_budget=60, batch_size=8, evaluator=ev)
+        assert res.times_array().tobytes() == \
+            ref.times_array().tobytes()
+        assert (res.cache_hits, res.cache_misses) == \
+            (ref.cache_hits, ref.cache_misses)
+        stats = ev.rpc_stats()["hosts"]
+        assert stats[servers[0].addr]["alive"] is False
+        assert stats[servers[1].addr]["alive"] is True
+        ev.close()
+    finally:
+        _close_all(servers)
+
+
+def test_rpc_all_hosts_down_local_fallback():
+    g = halo3d_dag()
+    server = EvalServer(g).start()
+    addr = server.addr
+    server.close()                        # fleet is dead before use
+    rng = random.Random(9)
+    scheds = [random_schedule(g, 2, rng) for _ in range(16)]
+    with E.make_evaluator(g, "rpc", hosts=[addr], min_shard=1,
+                          retries=1, backoff=0.01,
+                          connect_timeout=2.0) as ev:
+        assert ev.evaluate(scheds) == [C.makespan(g, s) for s in scheds]
+        assert ev.local_evals == len(scheds)
+        assert ev.rpc_stats()["local_evals"] == len(scheds)
+
+
+def test_rpc_all_hosts_down_no_fallback_raises():
+    g = spmv_dag_fine()
+    server = EvalServer(g).start()
+    addr = server.addr
+    server.close()
+    rng = random.Random(10)
+    scheds = [random_schedule(g, 2, rng) for _ in range(8)]
+    with E.make_evaluator(g, "rpc", hosts=[addr], min_shard=1,
+                          retries=0, backoff=0.01, connect_timeout=2.0,
+                          local_fallback=False) as ev:
+        with pytest.raises(E.RpcError):
+            ev.evaluate(scheds)
+
+
+def test_rpc_fingerprint_mismatch_refused():
+    """A server for a different space must refuse the handshake — a
+    configuration error surfaced loudly, never silently-wrong data."""
+    g_client = halo3d_dag()
+    server = EvalServer(spmv_dag_fine()).start()
+    rng = random.Random(11)
+    scheds = [random_schedule(g_client, 2, rng) for _ in range(8)]
+    try:
+        with E.make_evaluator(g_client, "rpc", hosts=[server.addr],
+                              min_shard=1) as ev:
+            with pytest.raises(E.RpcHandshakeError, match="refused"):
+                ev.evaluate(scheds)
+        assert server.n_refused == 1
+    finally:
+        server.close()
+
+
+def test_rpc_hedges_straggler_to_idle_host():
+    """One deliberately slow host: the fast host drains the queue, then
+    hedges the straggler's in-flight shards — results stay identical
+    and the batch completes at the fast host's pace."""
+    g = spmv_dag_fine()
+    slow = EvalServer(g, delay=0.3).start()
+    fast = EvalServer(g).start()
+    rng = random.Random(12)
+    scheds = [random_schedule(g, 2, rng) for _ in range(16)]
+    try:
+        with E.make_evaluator(g, "rpc", hosts=[slow.addr, fast.addr],
+                              min_shard=1, max_inflight=2) as ev:
+            assert ev.evaluate(scheds) == [C.makespan(g, s)
+                                           for s in scheds]
+            hosts = ev.rpc_stats()["hosts"]
+            assert hosts[fast.addr]["hedged"] >= 1
+    finally:
+        _close_all([slow, fast])

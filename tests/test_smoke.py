@@ -2,7 +2,8 @@
 import pytest
 
 from benchmarks.smoke import (run_autotune_smoke, run_backend_smoke,
-                              run_ooc_smoke, run_smoke, run_store_smoke)
+                              run_ooc_smoke, run_rpc_smoke, run_smoke,
+                              run_store_smoke)
 
 
 @pytest.mark.smoke
@@ -53,6 +54,21 @@ def test_smoke_ooc_distill_memory_ceiling():
     assert out["ooc_ok"]
     assert not out["dense_ok"]
     assert out["dense"]["memory_error"]
+
+
+@pytest.mark.smoke
+def test_smoke_rpc_fleet_warm_start(tmp_path):
+    """Two localhost evaluation-server subprocesses sharing one store:
+    the cold rpc search must match serial byte-for-byte, and a warm
+    rpc search must replay from the shared store with zero
+    measurements and zero engine.measure spans."""
+    out = run_rpc_smoke(str(tmp_path / "rpc.evalstore"))
+    assert out["hosts"] == 2
+    assert out["rpc_identical_to_sim"]
+    assert not out["warm_cache_restored"]        # tmp file starts cold
+    assert out["warm"]["store_hits"] > 0
+    assert out["warm"]["misses"] == 0
+    assert out["warm"]["measure_spans"] == 0
 
 
 @pytest.mark.smoke
